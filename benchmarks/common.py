@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV emission, small-model setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_optimizer
+from repro.core.base import OptimizerSpec
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call (µs), blocking on all outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit_csv(rows: List[Dict], header: List[str]) -> None:
+    print(','.join(header))
+    for r in rows:
+        print(','.join(str(r.get(h, '')) for h in header))
+
+
+# The paper's hyperparameters (Table 3), scaled for CPU-size models.
+PAPER_OPTS = {
+    'adam': OptimizerSpec(name='adam', learning_rate=3e-3, beta1=0.9,
+                          beta2=0.98, extra={'schedule': 'rsqrt',
+                                             'warmup_steps': 40}),
+    'adagrad': OptimizerSpec(name='adagrad', learning_rate=0.1, beta1=0.9,
+                             extra={'warmup_steps': 40}),
+    'adafactor': OptimizerSpec(name='adafactor', learning_rate=3e-3,
+                               beta1=0.9, extra={'schedule': 'rsqrt',
+                                                 'warmup_steps': 40}),
+    'sm3': OptimizerSpec(name='sm3', learning_rate=0.15, beta1=0.9,
+                         extra={'warmup_steps': 40}),
+    'sm3-i': OptimizerSpec(name='sm3-i', learning_rate=0.15, beta1=0.9,
+                           extra={'warmup_steps': 40}),
+    'sgd': OptimizerSpec(name='sgd', learning_rate=0.3, beta1=0.9,
+                         extra={'warmup_steps': 40}),
+}
+
+
+def small_lm(arch: str = 'transformer-big', **kw):
+    cfg, _ = get_config(arch)
+    return cfg.reduced(**kw)

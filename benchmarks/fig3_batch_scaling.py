@@ -1,0 +1,47 @@
+"""Paper Fig. 3 (right) analog: steps-to-target-quality vs batch size for
+SM3 — the paper observed near-linear scaling up to 2^16. CPU-scale sweep
+over batch ∈ {8, 16, 32, 64} on the reduced BERT-Large."""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_OPTS, emit_csv, small_lm
+from repro.core import make_optimizer
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train import trainer
+
+TARGET = 4.4
+MAX_STEPS = 300
+
+
+def run():
+    cfg = small_lm('bert-large', d_model=128, d_ff=256, n_repeats=2,
+                   vocab=512, seq=32)
+    rows = []
+    for batch in (8, 16, 32, 64):
+        opt = make_optimizer(PAPER_OPTS['sm3'], d_model=cfg.d_model)
+        ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                    global_batch=batch, seed=1))
+        _, hist = trainer.train_loop(cfg, opt, ds, steps=MAX_STEPS,
+                                     log_every=5,
+                                     callback=None)
+        to_target = next((h['step'] for h in hist if h['loss'] <= TARGET), -1)
+        rows.append({'batch': batch, 'steps_to_target': to_target,
+                     'final_loss': round(hist[-1]['loss'], 4)})
+        if to_target < 0:
+            continue
+    return rows
+
+
+def main():
+    rows = run()
+    emit_csv(rows, ['batch', 'steps_to_target', 'final_loss'])
+    ok = [r for r in rows if r['steps_to_target'] > 0]
+    if len(ok) >= 2:
+        first, last = ok[0], ok[-1]
+        scale = (first['steps_to_target'] / last['steps_to_target'])
+        ideal = last['batch'] / first['batch']
+        print(f"# scaling: batch x{ideal:.0f} -> steps ÷{scale:.2f} "
+              f"(ideal ÷{ideal:.0f}; paper: near-linear to 2^16)")
+
+
+if __name__ == '__main__':
+    main()

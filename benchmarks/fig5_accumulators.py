@@ -1,0 +1,81 @@
+"""Paper Fig. 5 analog: tightness of SM3's ν against Adagrad's γ (Eq. 1) for
+the embedding layer — sorted top-100 accumulator magnitudes after training.
+
+Paper finding: ν'(SM3-II) ≤ ν(SM3-I), both upper-bound γ, and SM3-II tracks
+γ tightly on activation-patterned layers (embeddings)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PAPER_OPTS, emit_csv, small_lm
+from repro.core import make_optimizer
+from repro.core.baselines import scale_by_adagrad
+from repro.core.sm3 import scale_by_sm3
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+
+STEPS = 60
+
+
+def run():
+    cfg = small_lm(d_model=64, d_ff=128, n_repeats=1, vocab=512, seq=64)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16))
+
+    tx_i = scale_by_sm3('I')
+    tx_ii = scale_by_sm3('II')
+    tx_ag = scale_by_adagrad()
+    s_i, s_ii, s_ag = tx_i.init(params), tx_ii.init(params), tx_ag.init(params)
+
+    grad_fn = jax.jit(jax.grad(lambda p, b: lm.lm_loss(p, b, cfg)[0]))
+    # shared trajectory driven by SM3-II updates (lr small) so all three see
+    # the same gradient stream
+    p = params
+    upd = jax.jit(lambda g, s: tx_ii.update(g, s, None))
+    for t in range(STEPS):
+        batch = ds.global_batch_at(t)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        g = grad_fn(p, batch)
+        _, s_i = tx_i.update(g, s_i, None)
+        _, s_ag = tx_ag.update(g, s_ag, None)
+        u, s_ii = upd(g, s_ii)
+        p = jax.tree.map(lambda w, du: w - 0.05 * du, p, u)
+
+    # embedding-layer accumulators
+    gamma = np.asarray(s_ag.gamma['embed'])                    # (V, d)
+    mu_i = [np.asarray(a) for a in s_i.mu['embed']]
+    mu_ii = [np.asarray(a) for a in s_ii.mu['embed']]
+    nu_i = np.minimum(mu_i[0], mu_i[1])
+    nu_ii = np.minimum(mu_ii[0], mu_ii[1])
+
+    order = np.argsort(-gamma.reshape(-1))[:100]
+    g_top = gamma.reshape(-1)[order]
+    ni_top = np.broadcast_to(nu_i, gamma.shape).reshape(-1)[order]
+    nii_top = np.broadcast_to(nu_ii, gamma.shape).reshape(-1)[order]
+    rows = [{'rank': i, 'adagrad_gamma': f'{g_top[i]:.4e}',
+             'sm3_I_nu': f'{ni_top[i]:.4e}', 'sm3_II_nu': f'{nii_top[i]:.4e}'}
+            for i in range(0, 100, 10)]
+    stats = {
+        'overapprox_I_median': float(np.median(ni_top / np.maximum(g_top, 1e-12))),
+        'overapprox_II_median': float(np.median(nii_top / np.maximum(g_top, 1e-12))),
+        'sandwich_violations': int(((g_top > nii_top + 1e-5)
+                                    | (nii_top > ni_top + 1e-5)).sum()),
+    }
+    return rows, stats
+
+
+def main():
+    rows, stats = run()
+    emit_csv(rows, ['rank', 'adagrad_gamma', 'sm3_I_nu', 'sm3_II_nu'])
+    print(f"# median over-approximation: SM3-I "
+          f"{stats['overapprox_I_median']:.2f}x, SM3-II "
+          f"{stats['overapprox_II_median']:.2f}x (paper: II much tighter)")
+    print(f"# sandwich γ ≤ ν'' ≤ ν violations: {stats['sandwich_violations']}")
+    assert stats['sandwich_violations'] == 0
+    assert stats['overapprox_II_median'] <= stats['overapprox_I_median'] + 1e-6
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,74 @@
+"""§Roofline reader: aggregate experiments/dryrun/*.json into the per-
+(arch × shape × mesh) roofline table used by EXPERIMENTS.md.
+
+Each row: the three roofline terms (s), dominant bottleneck, MODEL_FLOPS
+(6·N·D train / 2·N_active·D serve), MODEL/HLO useful-compute ratio, memory
+per device, and the roofline fraction (useful-work time at peak over the
+dominant-term time)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import emit_csv
+
+
+def load(out_dir: str = 'experiments/dryrun', tag: str = ''):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, '*.json'))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split('__')
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        t = r['roofline']
+        rows.append({
+            'arch': r['arch'], 'shape': r['shape'], 'mesh': r['mesh'],
+            'kind': r['kind'],
+            't_compute_s': f"{t['t_compute_s']:.3e}",
+            't_memory_s': f"{t['t_memory_s']:.3e}",
+            't_collective_s': f"{t['t_collective_s']:.3e}",
+            't_memory_bf16eq_s': f"{t.get('t_memory_bf16eq_s', float('nan')):.3e}",
+            't_collective_bf16eq_s': f"{t.get('t_collective_bf16eq_s', float('nan')):.3e}",
+            'dominant': t['dominant'],
+            'model_flops_per_chip': f"{r['model_flops_per_chip']:.3e}",
+            'useful_flops_ratio': round(r['useful_flops_ratio'], 3),
+            'mem_gib': round(r['memory']['peak_per_device_gib'], 2),
+            'roofline_fraction': round(r['roofline_fraction'], 4),
+            'roofline_fraction_bf16eq': round(
+                r.get('roofline_fraction_bf16eq', float('nan')), 4),
+        })
+    return rows
+
+
+HEADER = ['arch', 'shape', 'mesh', 'kind', 't_compute_s', 't_memory_s',
+          't_collective_s', 't_memory_bf16eq_s', 't_collective_bf16eq_s',
+          'dominant', 'model_flops_per_chip',
+          'useful_flops_ratio', 'mem_gib', 'roofline_fraction',
+          'roofline_fraction_bf16eq']
+
+
+def main(tag: str = ''):
+    import os as _os
+    out_dir = _os.environ.get('ROOFLINE_DIR', 'experiments/dryrun')
+    rows = load(out_dir=out_dir, tag=tag)
+    if not rows:
+        print('# no dry-run artifacts found — run: '
+              'PYTHONPATH=src python -m repro.launch.dryrun')
+        return
+    emit_csv(rows, HEADER)
+    worst = min((r for r in rows if r['kind'] == 'train'),
+                key=lambda r: r['roofline_fraction'], default=None)
+    if worst:
+        print(f"# worst train roofline fraction: {worst['arch']} "
+              f"{worst['shape']} {worst['mesh']} = "
+              f"{worst['roofline_fraction']}")
+
+
+if __name__ == '__main__':
+    main(sys.argv[1] if len(sys.argv) > 1 else '')

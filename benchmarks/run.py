@@ -1,0 +1,38 @@
+"""Benchmark runner: one module per paper table/figure. Each prints a CSV.
+
+  table1_memory     Table 1 — Transformer-Big optimizer memory
+  table2_memory     Table 2 — BERT-Large memory vs batch
+  fig2_convergence  Fig. 2  — convergence @ fixed & doubled batch
+  fig3_batch_scaling Fig. 3 — steps-to-quality vs batch (SM3)
+  fig5_accumulators Fig. 5  — accumulator tightness γ vs ν vs ν'
+  step_time         §5 wall-time claim — per-step/update timings
+  roofline          §Roofline — reads experiments/dryrun/*.json
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_convergence, fig3_batch_scaling,
+                            fig5_accumulators, roofline, step_time,
+                            table1_memory, table2_memory)
+    mods = {
+        'table1_memory': table1_memory,
+        'table2_memory': table2_memory,
+        'fig2_convergence': fig2_convergence,
+        'fig3_batch_scaling': fig3_batch_scaling,
+        'fig5_accumulators': fig5_accumulators,
+        'step_time': step_time,
+        'roofline': roofline,
+    }
+    wanted = sys.argv[1:] or list(mods)
+    for name in wanted:
+        print(f'\n===== {name} =====', flush=True)
+        t0 = time.perf_counter()
+        mods[name].main()
+        print(f'# [{name} done in {time.perf_counter() - t0:.1f}s]',
+              flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 1 analog: optimizer memory for Transformer-Big (en→fr).
+
+Reports exact optimizer-state bytes (analytic from the real full-size
+Transformer-Big parameter shapes, and measured on a reduced instantiation to
+validate the analytic path), plus the per-core totals at the paper's 4×4
+TPUv2 setting (32 cores, batch 12/core). The paper's numbers: Adam 6.88,
+Adagrad 6.85, Adafactor 5.43, SM3 5.36 GiB/core — dominated by activations;
+the *optimizer state* difference (≈2 bytes/param × 375M) is what SM3
+removes, and is exactly what this table isolates.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_csv
+from repro.configs import get_config
+from repro.core import make_optimizer, tree_bytes
+from repro.core.base import OptimizerSpec
+from repro.core.memory import memory_report, optimizer_state_bytes
+from repro.models import lm
+
+OPTS = ('adam', 'adagrad', 'adafactor', 'sm3', 'sgd')
+
+
+def run(arch: str = 'transformer-big'):
+    cfg, _ = get_config(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    rep = memory_report(shapes, OPTS)
+
+    # validate analytic == measured on the reduced config
+    r = cfg.reduced()
+    params_r = lm.init_params(jax.random.PRNGKey(0), r)
+    rows = []
+    for name in OPTS:
+        opt = make_optimizer(OptimizerSpec(name=name, learning_rate=0.1))
+        state = opt.init(params_r)
+        measured = tree_bytes(state)
+        analytic_r = optimizer_state_bytes(name, params_r)
+        # measured includes schedule counters (a few bytes)
+        assert abs(measured - analytic_r) <= 64, (name, measured, analytic_r)
+        rows.append({
+            'optimizer': name,
+            'state_bytes_full': rep[name]['state_bytes'],
+            'state_gib_full': round(rep[name]['state_gib'], 4),
+            'bytes_per_param': round(rep[name]['bytes_per_param'], 3),
+            'reduced_analytic==measured': 'yes',
+        })
+    return rows, rep['_params']
+
+
+def main():
+    rows, par = run()
+    print(f"# Transformer-Big analog: {par['count']/1e6:.1f}M params "
+          f"({par['param_gib_f32']:.3f} GiB f32)")
+    emit_csv(rows, ['optimizer', 'state_bytes_full', 'state_gib_full',
+                    'bytes_per_param', 'reduced_analytic==measured'])
+    sm3 = next(r for r in rows if r['optimizer'] == 'sm3')
+    adam = next(r for r in rows if r['optimizer'] == 'adam')
+    print(f"# SM3 saves {adam['state_gib_full'] - sm3['state_gib_full']:.3f} "
+          f"GiB vs Adam on optimizer state "
+          f"({adam['state_gib_full']/max(sm3['state_gib_full'],1e-9):.2f}x)")
+
+
+if __name__ == '__main__':
+    main()

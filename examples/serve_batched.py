@@ -1,0 +1,43 @@
+"""Serving example: batched generation with the KV-cache engine over any
+assigned architecture (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-2.7b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='stablelm-1.6b')
+    ap.add_argument('--requests', type=int, default=6)
+    ap.add_argument('--slots', type=int, default=3)
+    ap.add_argument('--new-tokens', type=int, default=12)
+    args = ap.parse_args()
+
+    cfg, _ = get_config(args.arch)
+    r = cfg.reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), r)
+    engine = ServeEngine(r, params, batch_slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, r.vocab, size=rng.integers(3, 10),
+                                        dtype=np.int32).astype(np.int32),
+                    max_new_tokens=args.new_tokens,
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i in range(args.requests)]
+    out = engine.generate(reqs)
+    for i, req in enumerate(out):
+        mode = 'greedy' if req.temperature == 0 else f'T={req.temperature}'
+        print(f'req{i} ({mode}): prompt={list(req.prompt)[:6]}... '
+              f'-> {req.output}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §7):
+  * atomic: state is written to ``step_<n>.tmp/`` then os.rename'd — a crash
+    mid-write never corrupts the latest valid checkpoint;
+  * async: ``save(..., blocking=False)`` snapshots to host memory
+    (device_get) on the caller thread — cheap — and writes on a background
+    thread, keeping the training critical path clean;
+  * keep-N garbage collection;
+  * elastic restore: leaves are stored *unsharded* (logical arrays) keyed by
+    their tree path; ``restore`` re-lays them out onto any template —
+    different mesh shape, device count, or sharding — via device_put;
+  * ``latest_step`` skips incomplete/corrupt directories, so auto-resume
+    after preemption always lands on a valid state.
+
+Format: one .npz per checkpoint (flattened path→array) + meta.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = '/'
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_fmt_key(k) for k in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def _fmt_key(k) -> str:
+    if hasattr(k, 'key'):
+        return str(k.key)
+    if hasattr(k, 'idx'):
+        return f'#{k.idx}'
+    if hasattr(k, 'name'):
+        return str(k.name)
+    return str(k)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state: PyTree, blocking: bool = True) -> None:
+        # snapshot to host on the caller thread (device buffers may mutate)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if blocking:
+            self._write(step, host_state)
+        else:
+            self.wait()  # one in-flight write at a time
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: PyTree) -> None:
+        with self._lock:
+            final = os.path.join(self.dir, f'step_{step:08d}')
+            tmp = final + '.tmp'
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat, _ = _flatten(host_state)
+            np.savez(os.path.join(tmp, 'state.npz'), **flat)
+            with open(os.path.join(tmp, 'meta.json'), 'w') as f:
+                json.dump({'step': step, 'n_leaves': len(flat)}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)            # atomic publish
+            self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.dir, f'step_{s:08d}'),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if not name.startswith('step_') or name.endswith('.tmp'):
+                continue
+            meta = os.path.join(self.dir, name, 'meta.json')
+            if not os.path.exists(meta):   # incomplete → not a valid ckpt
+                continue
+            try:
+                out.append(int(name[len('step_'):]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: PyTree) -> PyTree:
+        """Restore onto ``template`` (arrays or ShapeDtypeStructs with
+        .sharding). Elastic: the stored logical arrays are device_put with
+        the template's sharding — any mesh shape works."""
+        path = os.path.join(self.dir, f'step_{step:08d}', 'state.npz')
+        data = np.load(path)
+        flat_t, treedef = _flatten(template)
+        missing = [k for k in flat_t if k not in data.files]
+        if missing:
+            raise ValueError(f'checkpoint missing keys: {missing[:5]}...')
+
+        leaves_t, treedef2 = jax.tree_util.tree_flatten(template)
+        paths = list(flat_t.keys())
+        restored = []
+        for key, tleaf in zip(paths, leaves_t):
+            arr = data[key]
+            if tuple(arr.shape) != tuple(tleaf.shape):
+                raise ValueError(
+                    f'{key}: shape {arr.shape} != template {tleaf.shape}')
+            sharding = getattr(tleaf, 'sharding', None)
+            if sharding is not None and not callable(sharding):
+                restored.append(jax.device_put(arr.astype(tleaf.dtype),
+                                               sharding))
+            else:
+                restored.append(jax.numpy.asarray(arr.astype(tleaf.dtype)))
+        return jax.tree_util.tree_unflatten(treedef2, restored)
+
+    def restore_latest(self, template: PyTree) -> Optional[PyTree]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, template)

@@ -1,0 +1,35 @@
+"""Architecture config registry: ``--arch <id>`` → (ModelConfig, META)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+# arch id → module name
+_MODULES = {
+    'llama-3.2-vision-11b': 'llama_3_2_vision_11b',
+    'mamba2-2.7b': 'mamba2_2_7b',
+    'mixtral-8x22b': 'mixtral_8x22b',
+    'deepseek-moe-16b': 'deepseek_moe_16b',
+    'stablelm-3b': 'stablelm_3b',
+    'stablelm-1.6b': 'stablelm_1_6b',
+    'mistral-nemo-12b': 'mistral_nemo_12b',
+    'h2o-danube-1.8b': 'h2o_danube_1_8b',
+    'musicgen-medium': 'musicgen_medium',
+    'zamba2-2.7b': 'zamba2_2_7b',
+    # the paper's own models
+    'transformer-big': 'transformer_big',
+    'bert-large': 'bert_large',
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES
+                       if k not in ('transformer-big', 'bert-large'))
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> Tuple[ModelConfig, Dict]:
+    if arch not in _MODULES:
+        raise KeyError(f'unknown arch {arch!r}; known: {sorted(_MODULES)}')
+    mod = importlib.import_module(f'repro.configs.{_MODULES[arch]}')
+    return mod.CONFIG, mod.META

@@ -1,0 +1,29 @@
+"""bert-large — the paper's §5.2 language model: 24 blocks, d_model=1024,
+16 heads, 340M params. Modeled as a causal LM of the same width (the
+Masked-LM objective is replaced by next-token prediction on the synthetic
+corpus; optimizer-memory structure identical; DESIGN.md §8).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='bert-large',
+    family='dense',
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=30522,
+    block_pattern=('dense',),
+    n_repeats=24,
+    param_dtype='float32',
+    activation_dtype='float32',
+    max_seq_len=4096,
+)
+
+META = {
+    'long_500k': False,
+    'kv_shard': 'heads',
+    'microbatches': {'train_4k': 4},
+    'source': 'paper §5.2 / Devlin et al. 2018',
+}

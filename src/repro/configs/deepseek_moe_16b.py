@@ -1,0 +1,31 @@
+"""deepseek-moe-16b [moe] — 28L d2048 16H (GQA kv=16) d_ff=1408 (per fine-
+grained expert) vocab=102400, MoE: 2 shared + 64 routed top-6.
+[arXiv:2401.06066; hf]
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name='deepseek-moe-16b',
+    family='moe',
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=102400,
+    block_pattern=('moe',),
+    n_repeats=28,
+    moe=MoEConfig(n_experts=64, n_shared_experts=2, top_k=6,
+                  capacity_factor=1.25),
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=32768,
+)
+
+META = {
+    'long_500k': False,          # full attention → skip
+    'kv_shard': 'heads',         # kv=16 == model axis
+    'microbatches': {'train_4k': 16},
+    'source': 'arXiv:2401.06066',
+}

@@ -1,0 +1,29 @@
+"""h2o-danube-1.8b [dense] — 24L d2560 32H (GQA kv=8) d_ff=6912 vocab=32000,
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='h2o-danube-1.8b',
+    family='dense',
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab=32000,
+    block_pattern=('dense',),
+    n_repeats=24,
+    sliding_window=4096,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=524288,
+)
+
+META = {
+    'long_500k': True,           # SWA bounds the KV window
+    'kv_shard': 'seq',
+    'microbatches': {'train_4k': 4},
+    'source': 'arXiv:2401.16818',
+}

@@ -1,0 +1,34 @@
+"""llama-3.2-vision-11b [vlm] — 40L d4096 32H (GQA kv=8) d_ff=14336
+vocab=128256; cross-attention image layers every 5th block.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+Vision frontend is a STUB per assignment: input_specs() provides 1600
+precomputed patch embeddings (B, 1600, d_model).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='llama-3.2-vision-11b',
+    family='vlm',
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    block_pattern=('dense', 'dense', 'dense', 'dense', 'cross'),
+    n_repeats=8,
+    n_modality_tokens=1600,
+    rope_theta=5e5,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=32768,
+)
+
+META = {
+    'long_500k': False,          # pure full attention → skip (DESIGN.md §5)
+    'kv_shard': 'seq',           # kv=8 < model axis 16 → shard cache on S
+    'microbatches': {'train_4k': 16},
+    'source': 'hf:meta-llama/Llama-3.2-11B-Vision',
+}

@@ -1,0 +1,28 @@
+"""mamba2-2.7b [ssm] — 64L d2560, attention-free, vocab=50280,
+ssm_state=128, SSD (state-space duality). [arXiv:2405.21060; unverified]
+"""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name='mamba2-2.7b',
+    family='ssm',
+    n_layers=64,
+    d_model=2560,
+    n_heads=32,           # unused (attention-free); kept for config symmetry
+    n_kv_heads=32,
+    d_ff=0,
+    vocab=50280,
+    block_pattern=('mamba2',),
+    n_repeats=64,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=524288,
+)
+
+META = {
+    'long_500k': True,           # constant-state decode: the SSM showcase
+    'kv_shard': 'heads',         # ssd state (B,H,P,N): shard H (80 heads)
+    'microbatches': {'train_4k': 8},
+    'source': 'arXiv:2405.21060',
+}

@@ -1,0 +1,30 @@
+"""mistral-nemo-12b [dense] — 40L d5120 32H (GQA kv=8, head_dim=128)
+d_ff=14336 vocab=131072, 128k ctx. [hf:mistralai/Mistral-Nemo-Base-2407; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='mistral-nemo-12b',
+    family='dense',
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    block_pattern=('dense',),
+    n_repeats=40,
+    head_dim_override=128,
+    rope_theta=1e6,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=131072,
+)
+
+META = {
+    'long_500k': False,          # full attention, own ctx limit 128k → skip
+    'kv_shard': 'seq',           # kv=8 < model axis
+    'microbatches': {'train_4k': 16},
+    'source': 'hf:mistralai/Mistral-Nemo-Base-2407',
+}

@@ -1,0 +1,31 @@
+"""mixtral-8x22b [moe] — 56L d6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+8 experts top-2, sliding-window attention. [arXiv:2401.04088; hf]
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name='mixtral-8x22b',
+    family='moe',
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=32768,
+    block_pattern=('moe',),
+    n_repeats=56,
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25),
+    sliding_window=4096,
+    rope_theta=1e6,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=524288,
+)
+
+META = {
+    'long_500k': True,           # SWA bounds the KV window to 4096
+    'kv_shard': 'seq',           # kv=8 < model axis
+    'microbatches': {'train_4k': 32},
+    'source': 'arXiv:2401.04088',
+}

@@ -1,0 +1,32 @@
+"""musicgen-medium [audio] — 48L d1536 24H (kv=24) d_ff=6144 vocab=2048,
+decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Modality frontend is a STUB per assignment: the EnCodec encoder is not
+built; inputs arrive as already-quantized codebook token ids (vocab 2048),
+which *is* the backbone's native input.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='musicgen-medium',
+    family='audio',
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    block_pattern=('dense',),
+    n_repeats=48,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=32768,
+)
+
+META = {
+    'long_500k': False,
+    'kv_shard': 'seq',           # kv=24 does not divide the model axis (16)
+    'microbatches': {'train_4k': 4},
+    'source': 'arXiv:2306.05284',
+}

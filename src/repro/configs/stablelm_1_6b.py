@@ -1,0 +1,28 @@
+"""stablelm-1.6b [dense] — 24L d2048 32H (kv=32) d_ff=5632 vocab=100352.
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='stablelm-1.6b',
+    family='dense',
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    block_pattern=('dense',),
+    n_repeats=24,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=32768,
+)
+
+META = {
+    'long_500k': False,
+    'kv_shard': 'heads',
+    'microbatches': {'train_4k': 8},
+    'source': 'hf:stabilityai/stablelm-2-1_6b',
+}

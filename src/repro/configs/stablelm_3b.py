@@ -1,0 +1,28 @@
+"""stablelm-3b [dense] — 32L d2560 32H (kv=32) d_ff=6912 vocab=50304.
+[hf:stabilityai/stablelm-2-1_6b family; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='stablelm-3b',
+    family='dense',
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab=50304,
+    block_pattern=('dense',),
+    n_repeats=32,
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=32768,
+)
+
+META = {
+    'long_500k': False,
+    'kv_shard': 'heads',
+    'microbatches': {'train_4k': 8},
+    'source': 'hf:stabilityai/stablelm-2-1_6b',
+}

@@ -1,0 +1,30 @@
+"""transformer-big — the paper's own WMT'14 model (Vaswani et al.), §5.1:
+375.4M params, 6 enc + 6 dec layers, d_model=1024, d_ff=8192, 16 heads,
+32K word-pieces. We model it as a 12-layer decoder-only LM of the same
+width (the optimizer-memory structure — the paper's subject — is identical;
+noted in DESIGN.md §8).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name='transformer-big',
+    family='dense',
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=32768,
+    block_pattern=('dense',),
+    n_repeats=12,
+    param_dtype='float32',       # paper-era f32 training
+    activation_dtype='float32',
+    max_seq_len=4096,
+)
+
+META = {
+    'long_500k': False,
+    'kv_shard': 'heads',
+    'microbatches': {'train_4k': 4},
+    'source': 'paper §5.1 / Vaswani et al. 2017',
+}

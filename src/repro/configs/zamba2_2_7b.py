@@ -1,0 +1,36 @@
+"""zamba2-2.7b [hybrid] — 54L d2560 32H (kv=32) d_ff=10240 vocab=32000,
+ssm_state=64: Mamba2 backbone + SHARED attention block (one parameter copy)
+applied every 6th layer. [arXiv:2411.15242; hf]
+
+Simplification noted in DESIGN.md: Zamba2 alternates two shared blocks with
+per-invocation LoRA; we implement one shared block without LoRA — the
+parameter-sharing memory structure (what matters for SM3 and sharding) is
+preserved.
+"""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name='zamba2-2.7b',
+    family='hybrid',
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    block_pattern=('mamba2', 'mamba2', 'mamba2', 'mamba2', 'mamba2', 'shared'),
+    n_repeats=9,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+    sliding_window=4096,         # shared attn uses a window for long ctx
+    attn_chunk=1024,
+    param_dtype='bfloat16',
+    activation_dtype='bfloat16',
+    max_seq_len=524288,
+)
+
+META = {
+    'long_500k': True,           # SSM state + windowed shared attention
+    'kv_shard': 'heads',
+    'microbatches': {'train_4k': 8},
+    'source': 'arXiv:2411.15242',
+}

@@ -1,0 +1,181 @@
+"""Minimal optax-style gradient-transformation API (no external deps).
+
+Every optimizer is a pair of pure functions:
+
+  init(params)            -> state pytree
+  update(grads, state, params) -> (updates, new_state)
+
+``updates`` are *descent directions already scaled by the learning rate*;
+apply with ``params = tree_add(params, updates)``.
+
+This mirrors optax closely enough that the optimizers compose with pjit:
+states are pytrees of jnp arrays, and the sharding layer
+(repro.launch.sharding) assigns PartitionSpecs to each state leaf by walking
+the same tree structure as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr scale
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (first applied first)."""
+
+    def init_fn(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update_fn(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def _lr_at(lr: ScalarOrSchedule, count: jnp.ndarray) -> jnp.ndarray:
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr, jnp.float32)
+
+
+class ScaleByLrState(NamedTuple):
+    count: jnp.ndarray  # int32 scalar
+
+
+def scale_by_learning_rate(lr: ScalarOrSchedule,
+                           flip_sign: bool = True) -> GradientTransformation:
+    """Multiply updates by -lr(step) (descent direction)."""
+    sign = -1.0 if flip_sign else 1.0
+
+    def init_fn(params):
+        del params
+        return ScaleByLrState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None):
+        del params
+        step_lr = sign * _lr_at(lr, state.count)
+        updates = jax.tree.map(lambda u: (step_lr * u).astype(u.dtype), updates)
+        return updates, ScaleByLrState(count=state.count + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class TraceState(NamedTuple):
+    momentum: PyTree
+
+
+def trace(beta1: float, ema: bool = True) -> GradientTransformation:
+    """Heavy-ball momentum. ema=True uses m = b*m + (1-b)*u (released-SM3 form)."""
+
+    def init_fn(params):
+        return TraceState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        mix = (1.0 - beta1) if ema else 1.0
+        new_m = jax.tree.map(
+            lambda m, u: (beta1 * m + mix * u).astype(m.dtype),
+            state.momentum, updates)
+        return new_m, TraceState(momentum=new_m)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ClipByGlobalNormState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ClipByGlobalNormState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        gnorm = global_norm(updates)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-16))
+        updates = jax.tree.map(lambda u: (u * scale).astype(u.dtype), updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        if weight_decay and params is not None:
+            updates = jax.tree.map(
+                lambda u, p: (u + weight_decay * p.astype(u.dtype)), updates, params)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype),
+                        params, updates)
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of all array leaves (optimizer-state memory accounting)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, 'dtype') and hasattr(leaf, 'shape'):
+            size = 1
+            for s in leaf.shape:
+                size *= int(s)
+            total += size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Config-system handle: name + hyperparams, resolved via core.registry."""
+    name: str
+    learning_rate: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-30
+    weight_decay: float = 0.0
+    momentum_dtype: str = 'float32'
+    accumulator_dtype: str = 'float32'
+    extra: dict = dataclasses.field(default_factory=dict)

@@ -1,0 +1,184 @@
+"""Baseline optimizers the paper compares against (§5): Adam, Adagrad,
+Adafactor (Shazeer & Stern 2018), SGD+momentum. Implemented from scratch on
+the base.GradientTransformation API so that optimizer-state memory accounting
+and sharding treat all optimizers uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import base
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+def scale_by_adam(beta1: float = 0.9, beta2: float = 0.999,
+                  eps: float = 1e-8) -> base.GradientTransformation:
+    def init_fn(params):
+        return AdamState(count=jnp.zeros([], jnp.int32),
+                         m=jax.tree.map(jnp.zeros_like, params),
+                         v=jax.tree.map(jnp.zeros_like, params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g,
+                         state.m, updates)
+        v = jax.tree.map(lambda v_, g: beta2 * v_ + (1 - beta2) * jnp.square(g),
+                         state.v, updates)
+        c1 = 1 - beta1 ** count.astype(jnp.float32)
+        c2 = 1 - beta2 ** count.astype(jnp.float32)
+        new_updates = jax.tree.map(
+            lambda m_, v_: (m_ / c1) / (jnp.sqrt(v_ / c2) + eps), m, v)
+        return new_updates, AdamState(count=count, m=m, v=v)
+
+    return base.GradientTransformation(init_fn, update_fn)
+
+
+def adam(learning_rate: base.ScalarOrSchedule, beta1=0.9, beta2=0.999,
+         eps=1e-8, weight_decay=0.0) -> base.GradientTransformation:
+    parts = [scale_by_adam(beta1, beta2, eps)]
+    if weight_decay:
+        parts.append(base.add_decayed_weights(weight_decay))
+    parts.append(base.scale_by_learning_rate(learning_rate))
+    return base.chain(*parts)
+
+
+# --------------------------------------------------------------------------
+# Adagrad (+ momentum, as the paper tunes it)
+# --------------------------------------------------------------------------
+
+class AdagradState(NamedTuple):
+    gamma: PyTree  # per-parameter Σ g² — the Eq. (1) accumulators
+
+
+def scale_by_adagrad(initial_accumulator: float = 0.0,
+                     eps: float = 0.0) -> base.GradientTransformation:
+    def init_fn(params):
+        return AdagradState(gamma=jax.tree.map(
+            lambda p: jnp.full(p.shape, initial_accumulator, jnp.float32), params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        gamma = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                             state.gamma, updates)
+        def precond(g, a):
+            denom = jnp.sqrt(a) + eps
+            return jnp.where(denom > 0, g / jnp.maximum(denom, 1e-38), 0.0)
+        new_updates = jax.tree.map(precond, updates, gamma)
+        return new_updates, AdagradState(gamma=gamma)
+
+    return base.GradientTransformation(init_fn, update_fn)
+
+
+def adagrad(learning_rate: base.ScalarOrSchedule, beta1: float = 0.9,
+            initial_accumulator: float = 0.0) -> base.GradientTransformation:
+    parts = [scale_by_adagrad(initial_accumulator)]
+    if beta1:
+        parts.append(base.trace(beta1, ema=True))
+    parts.append(base.scale_by_learning_rate(learning_rate))
+    return base.chain(*parts)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — the paper's main memory-efficient rival.
+# Factored second moment for rank>=2, increasing-β2 schedule, update clipping,
+# relative step sizes optional (paper used explicit lr+rsqrt schedule).
+# --------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    vr: PyTree  # row second-moment (rank>=2) or full v (rank<=1)
+    vc: PyTree  # col second-moment (rank>=2) or () sentinel
+
+
+def _adafactor_init_leaf(p: jnp.ndarray):
+    if p.ndim >= 2:
+        # factor over the last two dims; leading dims stay on both factors
+        vr = jnp.zeros(p.shape[:-1], jnp.float32)            # reduce last dim
+        vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)  # reduce 2nd-last
+        return vr, vc
+    return jnp.zeros(p.shape, jnp.float32), jnp.zeros((0,), jnp.float32)
+
+
+def scale_by_adafactor(beta2_decay: float = 0.8, eps: float = 1e-30,
+                       clip_threshold: float = 1.0) -> base.GradientTransformation:
+    def init_fn(params):
+        leaves = jax.tree.map(_adafactor_init_leaf, params)
+        vr = jax.tree.map(lambda t: t[0], leaves,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda t: t[1], leaves,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(count=jnp.zeros([], jnp.int32), vr=vr, vc=vc)
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        # increasing decay: β2_t = 1 - t^{-0.8}
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-beta2_decay)
+
+        def leaf(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                new_vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                new_vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r_factor = jax.lax.rsqrt(
+                    new_vr / jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), 1e-38))
+                c_factor = jax.lax.rsqrt(new_vc)
+                u = g * r_factor[..., None] * c_factor[..., None, :]
+            else:
+                new_vr = beta2 * vr + (1 - beta2) * g2
+                new_vc = vc
+                u = g * jax.lax.rsqrt(new_vr)
+            # update clipping (Shazeer-Stern eq. 28)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-38)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return u, new_vr, new_vc
+
+        flat_g, treedef = jax.tree.flatten(updates)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        out = [leaf(g, vr, vc) for g, vr, vc in zip(flat_g, flat_vr, flat_vc)]
+        new_updates = treedef.unflatten([o[0] for o in out])
+        new_vr = treedef.unflatten([o[1] for o in out])
+        new_vc = treedef.unflatten([o[2] for o in out])
+        return new_updates, AdafactorState(count=count, vr=new_vr, vc=new_vc)
+
+    return base.GradientTransformation(init_fn, update_fn)
+
+
+def adafactor(learning_rate: base.ScalarOrSchedule, beta1: float = 0.9,
+              beta2_decay: float = 0.8) -> base.GradientTransformation:
+    parts = [scale_by_adafactor(beta2_decay=beta2_decay)]
+    if beta1:
+        parts.append(base.trace(beta1, ema=True))
+    parts.append(base.scale_by_learning_rate(learning_rate))
+    return base.chain(*parts)
+
+
+# --------------------------------------------------------------------------
+# SGD (+momentum)
+# --------------------------------------------------------------------------
+
+def sgd(learning_rate: base.ScalarOrSchedule,
+        beta1: float = 0.9) -> base.GradientTransformation:
+    parts = []
+    if beta1:
+        parts.append(base.trace(beta1, ema=False))
+    parts.append(base.scale_by_learning_rate(learning_rate))
+    return base.chain(*parts)

@@ -1,0 +1,91 @@
+"""Cover abstractions for SM3 (paper §3-4).
+
+SM3 is defined over an arbitrary cover {S_r} of the parameter indices. Two
+implementations live here:
+
+* ``codim1_cover_shapes``: the practical cover from §4 — for a tensor of shape
+  (n_1, ..., n_p) the cover is all co-dimension-1 slices; accumulator r (one
+  per axis) is stored as a broadcast-ready tensor with shape n_r on axis r and
+  1 elsewhere, e.g. a (m, n) matrix gets a (m, 1) row accumulator and a
+  (1, n) column accumulator. Memory: Θ(Σ n_i) vs Θ(Π n_i).
+
+* ``GeneralCover``: the abstract index-set form from §3, for arbitrary
+  (possibly overlapping) covers over a flat parameter vector. Used by tests to
+  validate the fast tensor path against the paper's pseudocode, and available
+  for custom covers (e.g. embedding-table rows only).
+
+Rank-0/1 parameters keep a full (Adagrad) accumulator — matching the released
+SM3 implementation; these are O(d_model) and negligible.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def codim1_cover_shapes(shape: Sequence[int]) -> List[Tuple[int, ...]]:
+    """Accumulator shapes for the co-dim-1 cover of a tensor ``shape``.
+
+    rank >= 2: one accumulator per axis, broadcastable against the tensor.
+    rank <= 1: a single full-shape accumulator (degenerate cover == Adagrad).
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) <= 1:
+        return [shape]
+    out = []
+    for axis in range(len(shape)):
+        acc_shape = tuple(n if a == axis else 1 for a, n in enumerate(shape))
+        out.append(acc_shape)
+    return out
+
+
+def cover_memory_ratio(shape: Sequence[int]) -> float:
+    """Θ(Π n_i) / Θ(Σ acc sizes): the paper's memory-saving factor."""
+    shape = tuple(int(s) for s in shape)
+    full = float(np.prod(shape)) if shape else 1.0
+    accs = sum(float(np.prod(s)) if s else 1.0 for s in codim1_cover_shapes(shape))
+    return full / max(accs, 1.0)
+
+
+class GeneralCover:
+    """Abstract cover {S_r} over a flat vector of dimension d (paper Alg. 1/2).
+
+    ``sets`` is a list of 1-D integer index arrays. Every index in [d] must be
+    covered. Implemented with a dense (k, d) membership mask — only for small
+    d (tests / research); production uses the tensor co-dim-1 path.
+    """
+
+    def __init__(self, sets: Sequence[np.ndarray], d: int):
+        self.d = int(d)
+        self.k = len(sets)
+        mask = np.zeros((self.k, self.d), dtype=bool)
+        for r, s in enumerate(sets):
+            mask[r, np.asarray(s, dtype=np.int64)] = True
+        if not mask.any(axis=0).all():
+            raise ValueError('cover does not cover all of [d]')
+        self.mask = jnp.asarray(mask)
+
+    @staticmethod
+    def singletons(d: int) -> 'GeneralCover':
+        return GeneralCover([np.array([i]) for i in range(d)], d)
+
+    @staticmethod
+    def rows_and_cols(m: int, n: int) -> 'GeneralCover':
+        """The co-dim-1 cover of an (m, n) matrix, flattened row-major."""
+        idx = np.arange(m * n).reshape(m, n)
+        sets = [idx[i, :] for i in range(m)] + [idx[:, j] for j in range(n)]
+        return GeneralCover(sets, m * n)
+
+    # --- paper pseudocode, vectorized over the (k, d) mask ---------------
+
+    def max_over_sets(self, v: jnp.ndarray) -> jnp.ndarray:
+        """(d,) -> (k,): max_{j in S_r} v(j)."""
+        neg_inf = jnp.asarray(-jnp.inf, v.dtype)
+        return jnp.max(jnp.where(self.mask, v[None, :], neg_inf), axis=1)
+
+    def min_over_covering(self, mu: jnp.ndarray) -> jnp.ndarray:
+        """(k,) -> (d,): min_{r: S_r ∋ i} mu(r)."""
+        pos_inf = jnp.asarray(jnp.inf, mu.dtype)
+        return jnp.min(jnp.where(self.mask, mu[:, None], pos_inf), axis=0)

@@ -1,0 +1,48 @@
+"""Optimizer registry: OptimizerSpec / config dict -> GradientTransformation.
+
+The single entry point the trainer, examples, and benchmarks use, so every
+optimizer is constructed the same way (schedule + optimizer + momentum).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.core import baselines, schedules, sm3
+from repro.core.base import GradientTransformation, OptimizerSpec
+
+
+def make_optimizer(spec: Union[OptimizerSpec, dict],
+                   total_steps: int = 0,
+                   d_model: int = 512) -> GradientTransformation:
+    if isinstance(spec, dict):
+        spec = OptimizerSpec(**spec)
+    name = spec.name.lower()
+
+    sched_name = spec.extra.get('schedule',
+                                'constant' if name in ('sm3', 'sm3-i', 'sm3-ii',
+                                                       'adagrad', 'sgd')
+                                else 'rsqrt')
+    warmup = int(spec.extra.get('warmup_steps', 0))
+    lr = schedules.make_schedule(sched_name, spec.learning_rate,
+                                 warmup_steps=warmup,
+                                 total_steps=total_steps, d_model=d_model)
+
+    if name in ('sm3', 'sm3-ii'):
+        return sm3.sm3(lr, beta1=spec.beta1, variant='II',
+                       weight_decay=spec.weight_decay,
+                       clip_norm=spec.extra.get('clip_norm'),
+                       use_pallas=spec.extra.get('use_pallas', False))
+    if name == 'sm3-i':
+        return sm3.sm3(lr, beta1=spec.beta1, variant='I',
+                       weight_decay=spec.weight_decay,
+                       clip_norm=spec.extra.get('clip_norm'))
+    if name == 'adam':
+        return baselines.adam(lr, beta1=spec.beta1, beta2=spec.beta2,
+                              weight_decay=spec.weight_decay)
+    if name == 'adagrad':
+        return baselines.adagrad(lr, beta1=spec.beta1)
+    if name == 'adafactor':
+        return baselines.adafactor(lr, beta1=spec.beta1)
+    if name == 'sgd':
+        return baselines.sgd(lr, beta1=spec.beta1)
+    raise ValueError(f'unknown optimizer {spec.name!r}')

@@ -1,0 +1,76 @@
+"""Learning-rate schedules from the paper (Appendix C, Table 4).
+
+  SM3 / Adagrad : warmup → constant η                         (paper: "All")
+  Adam/Adafactor (Transformer): warmup → η·sqrt(d_model/t)     [Vaswani et al.]
+  Adam/Adafactor (BERT): warmup → η·(1 − t/T) linear decay     [Devlin et al.]
+  SGD (AmoebaNet): staircase max{η₀, η·α^⌊t/τ⌋}
+
+All schedules take the integer step and return a float32 LR.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.base import Schedule
+
+
+def _warmup_scale(step: jnp.ndarray, warmup_steps: int) -> jnp.ndarray:
+    t = step.astype(jnp.float32) + 1.0
+    if warmup_steps <= 0:
+        return jnp.ones_like(t)
+    return jnp.minimum(1.0, t / float(warmup_steps))
+
+
+def constant_with_warmup(eta: float, warmup_steps: int) -> Schedule:
+    """Paper's SM3/Adagrad schedule: linear warmup to η, then constant."""
+    def fn(step):
+        return eta * _warmup_scale(step, warmup_steps)
+    return fn
+
+
+def rsqrt_with_warmup(eta: float, warmup_steps: int, d_model: int) -> Schedule:
+    """Vaswani-form inverse-sqrt decay, normalized so the peak (at t = warmup)
+    equals η: lr(t) = η·min(sqrt(w/t), t/w). d_model is absorbed into η, as the
+    paper tunes η per-model anyway."""
+    del d_model
+    def fn(step):
+        t = step.astype(jnp.float32) + 1.0
+        w = float(max(warmup_steps, 1))
+        return eta * jnp.minimum(jnp.sqrt(w / t), t / w)
+    return fn
+
+
+def linear_decay_with_warmup(eta: float, warmup_steps: int,
+                             total_steps: int) -> Schedule:
+    """η·(1 − t/T) after warmup (BERT form)."""
+    def fn(step):
+        t = step.astype(jnp.float32)
+        frac = jnp.clip(1.0 - t / float(max(total_steps, 1)), 0.0, 1.0)
+        return eta * frac * _warmup_scale(step, warmup_steps)
+    return fn
+
+
+def staircase(eta: float, eta_min: float, alpha: float, tau: int,
+              warmup_steps: int) -> Schedule:
+    """max{η₀, η·α^⌊t/τ⌋} (AmoebaNet SGD form)."""
+    def fn(step):
+        t = step.astype(jnp.float32)
+        val = eta * alpha ** jnp.floor(t / float(tau))
+        return jnp.maximum(eta_min, val) * _warmup_scale(step, warmup_steps)
+    return fn
+
+
+def make_schedule(name: str, eta: float, warmup_steps: int = 0,
+                  total_steps: int = 0, d_model: int = 512,
+                  **kw) -> Schedule:
+    if name == 'constant':
+        return constant_with_warmup(eta, warmup_steps)
+    if name == 'rsqrt':
+        return rsqrt_with_warmup(eta, warmup_steps, d_model)
+    if name == 'linear':
+        return linear_decay_with_warmup(eta, warmup_steps, total_steps)
+    if name == 'staircase':
+        return staircase(eta, kw.get('eta_min', eta * 0.01),
+                         kw.get('alpha', 0.88), kw.get('tau', 4500),
+                         warmup_steps)
+    raise ValueError(f'unknown schedule {name!r}')

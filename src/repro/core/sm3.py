@@ -1,0 +1,169 @@
+"""SM3-I and SM3-II (Anil, Gupta, Koren, Singer — NeurIPS 2019), in JAX.
+
+Implements Algorithms SM3-I and SM3-II with the practical co-dimension-1
+covers of §4. Per parameter tensor of shape (n_1, ..., n_p) the state is p
+accumulators of shapes (n_1,1,..), (1,n_2,1,..), ... — Θ(Σ n_i) memory.
+
+SM3-II (the variant used in all the paper's experiments, and our default):
+
+    ν'_t(i) = min_{r: S_r ∋ i} μ'_{t-1}(r) + g_t²(i)
+    w_{t+1}(i) = w_t(i) − η g_t(i) / sqrt(ν'_t(i))      (0/0 := 0)
+    μ'_t(r) = max_{j ∈ S_r} ν'_t(j)
+
+SM3-I:
+
+    μ_t(r) = μ_{t-1}(r) + max_{j ∈ S_r} g_t²(j)
+    ν_t(i) = min_{r: S_r ∋ i} μ_t(r)
+    w_{t+1}(i) = w_t(i) − η g_t(i) / sqrt(ν_t(i))
+
+The transform emits *preconditioned directions* g/√ν; learning rate and
+momentum are composed via base.chain (momentum applies after preconditioning,
+as in the released SM3: m_t = β1 m_{t-1} + (1−β1) u_t).
+
+For 2-D parameters the update can be dispatched to the fused Pallas TPU
+kernel (repro.kernels.sm3) with ``use_pallas=True``; the jnp path here is the
+reference semantics and the default on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import base
+from repro.core.covers import codim1_cover_shapes
+
+PyTree = Any
+
+
+class SM3State(NamedTuple):
+    mu: PyTree  # per-param tuple of accumulators (co-dim-1 broadcastable)
+
+
+def _init_mu(p: jnp.ndarray, dtype: jnp.dtype) -> Tuple[jnp.ndarray, ...]:
+    return tuple(jnp.zeros(s, dtype=dtype) for s in codim1_cover_shapes(p.shape))
+
+
+def _nu_from_mu(mu: Tuple[jnp.ndarray, ...], shape) -> jnp.ndarray:
+    """ν(i) = min over covering accumulators, via broadcast mins."""
+    if len(mu) == 1:
+        return jnp.broadcast_to(mu[0], shape)
+    nu = mu[0]
+    for acc in mu[1:]:
+        nu = jnp.minimum(nu, acc)
+    return jnp.broadcast_to(nu, shape)
+
+
+def _max_over_others(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """max over all axes except ``axis``, keepdims (→ accumulator shape)."""
+    if x.ndim <= 1:
+        return x
+    axes = tuple(a for a in range(x.ndim) if a != axis)
+    return jnp.max(x, axis=axes, keepdims=True)
+
+
+def _precondition(g: jnp.ndarray, nu: jnp.ndarray) -> jnp.ndarray:
+    """g / sqrt(ν) with the paper's 0/0 := 0 convention."""
+    rsqrt = jnp.where(nu > 0, jax.lax.rsqrt(jnp.maximum(nu, 1e-38)), 0.0)
+    return g * rsqrt
+
+
+def scale_by_sm3(variant: str = 'II',
+                 accumulator_dtype: jnp.dtype = jnp.float32,
+                 use_pallas: bool = False) -> base.GradientTransformation:
+    """The SM3 preconditioner as a gradient transformation.
+
+    variant: 'I' (Alg. SM3-I) or 'II' (Alg. SM3-II, default & paper's choice).
+    """
+    if variant not in ('I', 'II'):
+        raise ValueError(f'unknown SM3 variant {variant!r}')
+
+    def init_fn(params):
+        mu = jax.tree.map(lambda p: _init_mu(p, accumulator_dtype), params,
+                          is_leaf=lambda x: isinstance(x, jnp.ndarray) or hasattr(x, 'shape'))
+        return SM3State(mu=mu)
+
+    def _update_leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
+        g32 = g.astype(accumulator_dtype)
+        if use_pallas and g.ndim == 2 and len(mu) == 2:
+            from repro.kernels.sm3 import ops as sm3_ops  # lazy: CPU default path stays dep-free
+            u, new_row, new_col = sm3_ops.sm3_ii_update(g32, mu[0], mu[1])
+            return u.astype(g.dtype), (new_row, new_col)
+        nu = _nu_from_mu(mu, g.shape) + jnp.square(g32)
+        u = _precondition(g32, nu)
+        new_mu = tuple(_max_over_others(nu, a) for a in range(len(mu))) \
+            if g.ndim >= 2 else (nu,)
+        return u.astype(g.dtype), new_mu
+
+    def _update_leaf_i(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
+        g32 = g.astype(accumulator_dtype)
+        g2 = jnp.square(g32)
+        if g.ndim >= 2:
+            new_mu = tuple(m + _max_over_others(g2, a) for a, m in enumerate(mu))
+        else:
+            new_mu = (mu[0] + g2,)
+        nu = _nu_from_mu(new_mu, g.shape)
+        u = _precondition(g32, nu)
+        return u.astype(g.dtype), new_mu
+
+    leaf_update = _update_leaf_ii if variant == 'II' else _update_leaf_i
+
+    def update_fn(updates, state, params=None):
+        del params
+        flat_g, treedef = jax.tree.flatten(updates)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        out = [leaf_update(g, mu) for g, mu in zip(flat_g, flat_mu)]
+        new_updates = treedef.unflatten([u for u, _ in out])
+        new_mu = treedef.unflatten([m for _, m in out])
+        return new_updates, SM3State(mu=new_mu)
+
+    return base.GradientTransformation(init_fn, update_fn)
+
+
+def sm3(learning_rate: base.ScalarOrSchedule,
+        beta1: float = 0.9,
+        variant: str = 'II',
+        weight_decay: float = 0.0,
+        clip_norm: Optional[float] = None,
+        accumulator_dtype: jnp.dtype = jnp.float32,
+        use_pallas: bool = False) -> base.GradientTransformation:
+    """The full SM3 optimizer as used in the paper's experiments.
+
+    Pipeline: [global-norm clip] → SM3 precondition → momentum(β1, EMA)
+    → [decoupled weight decay] → −lr scaling. The paper uses β1 = 0.9
+    (0.95 for the very large BERT batches) and *no* post-warmup LR decay.
+    """
+    chain = []
+    if clip_norm is not None:
+        chain.append(base.clip_by_global_norm(clip_norm))
+    chain.append(scale_by_sm3(variant=variant, accumulator_dtype=accumulator_dtype,
+                              use_pallas=use_pallas))
+    if beta1:
+        chain.append(base.trace(beta1, ema=True))
+    if weight_decay:
+        chain.append(base.add_decayed_weights(weight_decay))
+    chain.append(base.scale_by_learning_rate(learning_rate))
+    return base.chain(*chain)
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations over abstract covers (paper pseudocode, flat d).
+# Used by tests/benchmarks to validate the tensor fast path and the
+# Prop.-1/3 invariants; not used in training.
+# ---------------------------------------------------------------------------
+
+def sm3_i_reference_step(w, g, mu, cover, lr):
+    """One SM3-I step over a GeneralCover. Returns (w', mu', nu)."""
+    mu = mu + cover.max_over_sets(jnp.square(g))
+    nu = cover.min_over_covering(mu)
+    w = w - lr * _precondition(g, nu)
+    return w, mu, nu
+
+
+def sm3_ii_reference_step(w, g, mu, cover, lr):
+    """One SM3-II step over a GeneralCover. Returns (w', mu', nu')."""
+    nu = cover.min_over_covering(mu) + jnp.square(g)
+    w = w - lr * _precondition(g, nu)
+    mu = cover.max_over_sets(nu)
+    return w, mu, nu

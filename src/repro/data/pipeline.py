@@ -1,0 +1,86 @@
+"""Deterministic synthetic LM data pipeline.
+
+Real corpora (WMT'14, Wikipedia+Books) are unavailable offline (DESIGN.md
+§8), so we synthesize token streams with *learnable structure*:
+
+  * Zipfian unigram marginals (mimics natural-language token frequency —
+    this is what makes Adagrad/SM3's per-coordinate adaptivity matter: rare
+    rows of the embedding see rare, large-magnitude gradients, the paper's
+    "activation pattern");
+  * order-1 Markov structure via a hashed transition rule with branching
+    factor ``branch``: p(x_{t+1} | x_t) is concentrated on `branch`
+    successors of x_t, mixed with Zipf noise at rate ``noise``.
+
+Statelessness/resumability: batch t is a pure function of (seed, step,
+shard) via counter-based RNG — a restart at step t regenerates the exact
+stream, which is what makes checkpoint-restart exact (no iterator state to
+persist) and straggler recomputation deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2          # Zipf exponent
+    branch: int = 4              # Markov successors per token
+    noise: float = 0.15          # P(next token ~ unigram) instead of Markov
+    n_shards: int = 1            # data-parallel shards
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        v = cfg.vocab
+        # Zipf unigram over the vocab (deterministic given vocab size)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._unigram = p / p.sum()
+        # hashed successor table: successors of token x are
+        # (a_j * x + b_j) % v for j < branch — O(1) memory, any vocab size
+        rng = np.random.default_rng(cfg.seed ^ 0x5EED)
+        self._succ_a = rng.integers(1, v, size=cfg.branch, dtype=np.int64) | 1
+        self._succ_b = rng.integers(0, v, size=cfg.branch, dtype=np.int64)
+
+    def _successors(self, x: np.ndarray) -> np.ndarray:
+        # (..., branch)
+        return (x[..., None] * self._succ_a + self._succ_b) % self.cfg.vocab
+
+    def batch_at(self, step: int, shard: int = 0,
+                 batch_size: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Generate batch ``step`` for data shard ``shard``; pure function."""
+        cfg = self.cfg
+        bs = batch_size or cfg.global_batch // cfg.n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, shard]))
+        L = cfg.seq_len + 1
+        toks = np.empty((bs, L), dtype=np.int64)
+        toks[:, 0] = rng.choice(cfg.vocab, size=bs, p=self._unigram)
+        # vectorized Markov walk
+        noise_mask = rng.random((bs, L - 1)) < cfg.noise
+        branch_pick = rng.integers(0, cfg.branch, size=(bs, L - 1))
+        noise_tok = rng.choice(cfg.vocab, size=(bs, L - 1), p=self._unigram)
+        for t in range(1, L):
+            succ = self._successors(toks[:, t - 1])          # (bs, branch)
+            nxt = succ[np.arange(bs), branch_pick[:, t - 1]]
+            toks[:, t] = np.where(noise_mask[:, t - 1], noise_tok[:, t - 1],
+                                  nxt)
+        return {
+            'tokens': toks[:, :-1].astype(np.int32),
+            'targets': toks[:, 1:].astype(np.int32),
+            'mask': np.ones((bs, cfg.seq_len), np.float32),
+        }
+
+    def global_batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Concatenate all shards (single-host testing convenience)."""
+        parts = [self.batch_at(step, s) for s in range(self.cfg.n_shards)]
+        return {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}

@@ -1,0 +1,33 @@
+"""Public jit'd wrappers for the SM3 Pallas kernels.
+
+On TPU backends we run the compiled kernel; elsewhere (this CPU container)
+we run interpret=True, which executes the kernel body in Python and is the
+correctness-validation path mandated for this repo.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sm3 import sm3 as _k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != 'tpu'
+
+
+def sm3_ii_update(g: jnp.ndarray, row_mu: jnp.ndarray, col_mu: jnp.ndarray,
+                  bm: int = 256, bn: int = 256
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(u, row_mu', col_mu') — the preconditioner used by core.sm3."""
+    return _k.sm3_ii_precondition(g, row_mu, col_mu, bm=bm, bn=bn,
+                                  interpret=_interpret())
+
+
+def sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1,
+                      bm: int = 256, bn: int = 256):
+    """(w', m', row_mu', col_mu') — fully fused optimizer step."""
+    return _k.sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1,
+                                bm=bm, bn=bn, interpret=_interpret())

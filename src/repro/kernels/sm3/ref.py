@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused SM3-II matrix kernels.
+
+Semantics are exactly core.sm3 SM3-II restricted to a rank-2 parameter with
+the rows+columns cover:
+
+    ν' = min(row_mu, col_mu) + g²          (broadcast (m,1) vs (1,n))
+    u  = g / sqrt(ν')        with 0/0 := 0
+    row_mu' = max_j ν'   (m,1)
+    col_mu' = max_i ν'   (1,n)
+
+and, for the fused step, the momentum + parameter update on top:
+
+    m' = β1 m + (1-β1) u
+    w' = w − lr · m'
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sm3_ii_precondition_ref(g: jnp.ndarray, row_mu: jnp.ndarray,
+                            col_mu: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    assert g.ndim == 2 and row_mu.shape == (g.shape[0], 1) \
+        and col_mu.shape == (1, g.shape[1])
+    g32 = g.astype(jnp.float32)
+    nu = jnp.minimum(row_mu, col_mu) + jnp.square(g32)
+    u = jnp.where(nu > 0, g32 * jax.lax.rsqrt(jnp.maximum(nu, 1e-38)), 0.0)
+    new_row = jnp.max(nu, axis=1, keepdims=True)
+    new_col = jnp.max(nu, axis=0, keepdims=True)
+    return u.astype(g.dtype), new_row, new_col
+
+
+def sm3_ii_fused_step_ref(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                          row_mu: jnp.ndarray, col_mu: jnp.ndarray,
+                          lr: float, beta1: float
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                     jnp.ndarray, jnp.ndarray]:
+    u, new_row, new_col = sm3_ii_precondition_ref(g, row_mu, col_mu)
+    new_m = (beta1 * m.astype(jnp.float32)
+             + (1.0 - beta1) * u.astype(jnp.float32))
+    new_w = w.astype(jnp.float32) - lr * new_m
+    return (new_w.astype(w.dtype), new_m.astype(m.dtype), new_row, new_col)

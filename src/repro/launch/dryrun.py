@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each enabled cell (launch.specs.grid) on the single-pod (16,16) mesh and
+the multi-pod (2,16,16) mesh:
+
+  * build the step fn (train_step / prefill / serve decode_step),
+  * jit with explicit in_shardings from launch.sharding,
+  * .lower().compile()  — sharding mismatches, unsupported collectives and
+    compile-time OOMs all surface here,
+  * record compiled.memory_analysis() (fits-in-HBM proof),
+    compiled.cost_analysis() (XLA's own numbers), and the trip-count-correct
+    static roofline terms from launch.hlo_analysis,
+  * write one JSON per cell to experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun [--arch ID] [--shape NAME] [--mesh single|multi|both]
+                                [--out DIR] [--list]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ASSIGNED_ARCHS
+from repro.launch import hlo_analysis, sharding as shr, specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.sharding_rules import logical_axis_rules
+
+
+def _shardings_for_cell(spec, args_abstract, mesh, multi_pod: bool):
+    """in_shardings tuple congruent with args_abstract."""
+    meta = spec['meta']
+    cfg = spec['cfg']
+    expert_shard = 'ep' if (cfg.moe and cfg.moe.n_experts % 16 == 0) else 'tp'
+    batch_shardable = spec['global_batch'] > 1
+    b_axes = (('pod', 'data') if multi_pod else 'data') if batch_shardable \
+        else None
+
+    if spec['kind'] == 'train':
+        state_shape = args_abstract[0]
+        pspecs = shr.param_specs(state_shape.params, expert_shard)
+        state_specs = shr.train_state_specs(state_shape, pspecs)
+        bspecs = shr.batch_specs(multi_pod, batch_shardable,
+                                 has_modality=cfg.family == 'vlm')
+        return (state_specs, bspecs)
+
+    params_shape = args_abstract[0]
+    pspecs = shr.param_specs(params_shape, expert_shard)
+    cache_sp = shr.cache_specs(args_abstract[2], kv_shard=meta['kv_shard'],
+                               multi_pod=multi_pod,
+                               batch_shardable=batch_shardable)
+    tok_spec = P(b_axes, None)
+    if spec['kind'] == 'prefill':
+        out = (pspecs, tok_spec, cache_sp)
+        if len(args_abstract) == 4:
+            out = out + (P(b_axes, None, None),)
+        return out
+    return (pspecs, tok_spec, cache_sp, P())     # decode
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             microbatches=None, expert_override=None,
+             remat_policy=None) -> dict:
+    t0 = time.time()
+    if microbatches is None and multi_pod:
+        # keep the per-device microbatch size invariant: the multi-pod mesh
+        # has 2x the batch shards, so halve the microbatch count — otherwise
+        # a microbatch has fewer sequences than batch shards and SPMD
+        # replicates whole microbatches (measured: 3x collective blowup on
+        # deepseek-moe train_4k multi; EXPERIMENTS.md §Perf).
+        _, meta = get_config(arch)
+        mb_meta = meta.get('microbatches', {}).get(shape_name)
+        if mb_meta:
+            microbatches = max(1, mb_meta // 2)
+    fn, args_abstract, spec = specs_mod.make_cell_fns(
+        arch, shape_name, microbatches=microbatches,
+        remat_policy=remat_policy)
+    cfg = spec['cfg']
+    in_spec_tree = _shardings_for_cell(spec, args_abstract, mesh, multi_pod)
+    in_shardings = shr.as_shardings(in_spec_tree, mesh)
+
+    rules = shr.activation_rules(
+        multi_pod=multi_pod, batch_shardable=spec['global_batch'] > 1,
+        expert_shard='ep' if (cfg.moe and cfg.moe.n_experts % 16 == 0)
+        else 'tp',
+        seq_sharding=spec['kind'] != 'decode')
+
+    # donate the mutated aggregate (train state / serve caches) — on real
+    # hardware these are aliased in place; without donation the memory
+    # analysis double-counts them.
+    donate = (0,) if spec['kind'] == 'train' else (2,)
+    with mesh, logical_axis_rules(rules):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args_abstract)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    static = hlo_analysis.analyze(hlo_text)
+    terms = hlo_analysis.roofline_terms(static)
+
+    n_chips = mesh.size
+    model_params = cfg.param_count()
+    active_params = cfg.active_param_count()
+    tokens = spec['global_batch'] * (spec['seq'] if spec['kind'] != 'decode'
+                                     else 1)
+    if spec['kind'] == 'train':
+        model_flops = 6.0 * active_params * tokens
+    else:
+        model_flops = 2.0 * active_params * tokens
+
+    result = {
+        'arch': arch, 'shape': shape_name,
+        'mesh': 'multi' if multi_pod else 'single',
+        'n_chips': n_chips, 'kind': spec['kind'],
+        'global_batch': spec['global_batch'], 'seq': spec['seq'],
+        'params_total': model_params, 'params_active': active_params,
+        'memory': {
+            'argument_bytes': mem.argument_size_in_bytes,
+            'output_bytes': mem.output_size_in_bytes,
+            'temp_bytes': mem.temp_size_in_bytes,
+            'alias_bytes': mem.alias_size_in_bytes,
+            'peak_per_device_gib': (mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes) / 2**30,
+        },
+        'xla_cost_analysis': {k: v for k, v in cost.items()
+                              if k in ('flops', 'bytes accessed')},
+        'static': static,
+        'roofline': terms,
+        'model_flops_global': model_flops,
+        'model_flops_per_chip': model_flops / n_chips,
+        'useful_flops_ratio': (model_flops / n_chips)
+        / max(static['flops'], 1.0),
+        'compile_s': time.time() - t0,
+    }
+    # roofline fraction: useful work time at peak / dominated step time
+    t_ideal = (model_flops / n_chips) / hlo_analysis.PEAK_FLOPS_BF16
+    t_bound = max(terms['t_compute_s'], terms['t_memory_s'],
+                  terms['t_collective_s'])
+    result['t_ideal_s'] = t_ideal
+    result['t_bound_s'] = t_bound
+    result['roofline_fraction'] = t_ideal / t_bound if t_bound > 0 else 0.0
+    if 't_memory_bf16eq_s' in terms:
+        t_bound_eq = max(terms['t_compute_s'], terms['t_memory_bf16eq_s'],
+                         terms['t_collective_bf16eq_s'])
+        result['roofline_fraction_bf16eq'] = (t_ideal / t_bound_eq
+                                              if t_bound_eq > 0 else 0.0)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default=None)
+    ap.add_argument('--shape', default=None)
+    ap.add_argument('--mesh', default='both',
+                    choices=['single', 'multi', 'both'])
+    ap.add_argument('--out', default='experiments/dryrun')
+    ap.add_argument('--microbatches', type=int, default=None)
+    ap.add_argument('--remat-policy', default=None)
+    ap.add_argument('--tag', default='')
+    ap.add_argument('--list', action='store_true')
+    args = ap.parse_args()
+
+    cells = list(specs_mod.grid())
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if args.mesh in ('single', 'both'):
+        meshes.append((make_production_mesh(multi_pod=False), False))
+    if args.mesh in ('multi', 'both'):
+        meshes.append((make_production_mesh(multi_pod=True), True))
+
+    failures = []
+    for arch, shape_name in cells:
+        for mesh, multi_pod in meshes:
+            tagname = f'{arch}__{shape_name}__{"multi" if multi_pod else "single"}'
+            if args.tag:
+                tagname += f'__{args.tag}'
+            path = os.path.join(args.out, tagname + '.json')
+            try:
+                res = run_cell(arch, shape_name, mesh, multi_pod,
+                               microbatches=args.microbatches,
+                               remat_policy=args.remat_policy)
+                with open(path, 'w') as f:
+                    json.dump(res, f, indent=1)
+                print(f'OK   {tagname}: mem/dev '
+                      f'{res["memory"]["peak_per_device_gib"]:.2f} GiB, '
+                      f'dominant={res["roofline"]["dominant"]}, '
+                      f'roofline={res["roofline_fraction"]:.3f}, '
+                      f'compile {res["compile_s"]:.0f}s', flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((tagname, repr(e)))
+                with open(path + '.err', 'w') as f:
+                    f.write(traceback.format_exc())
+                print(f'FAIL {tagname}: {e}', flush=True)
+
+    print(f'\n{len(cells) * len(meshes) - len(failures)} passed, '
+          f'{len(failures)} failed')
+    for t, e in failures:
+        print(' ', t, e[:200])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,453 @@
+"""Static roofline extraction from post-SPMD, post-fusion HLO text.
+
+Why not just compiled.cost_analysis()? Two reasons, both verified on this
+container (EXPERIMENTS.md §Dry-run methodology):
+
+  1. XLA's HloCostAnalysis counts a while-loop body ONCE, but our layer
+     stack and microbatch accumulation are lax.scans — flops/bytes are
+     undercounted by ~n_layers × microbatches. We read each while op's
+     ``backend_config known_trip_count`` (fallback: max constant in the
+     condition computation) and weight every computation by the product of
+     its enclosing trip counts.
+  2. cost_analysis has no collective-bytes term at all. We sum operand
+     bytes of all-gather/all-reduce/reduce-scatter/all-to-all/
+     collective-permute ops (× trip-count weight).
+
+Byte model (the standard post-fusion roofline proxy): every top-level
+instruction of a non-fusion computation reads its operands and writes its
+output to HBM once; fusion computations internalize their temporaries.
+TPU-fidelity adjustments for the CPU-compiled HLO:
+
+  * ``convert`` ops are excluded — the CPU backend materializes f32 copies
+    of bf16 dot operands (whole KV caches!); the TPU MXU consumes bf16
+    natively and converts fuse away.
+  * ``dynamic-update-slice`` (and fusions whose root is one) is counted
+    in-place: 2 × update bytes, not the full destination.
+  * control ops (while/call/tuple/...) carry no traffic of their own;
+    their bodies are walked with multipliers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    'f64': 8, 's64': 8, 'u64': 8, 'c64': 8,
+    'f32': 4, 's32': 4, 'u32': 4,
+    'bf16': 2, 'f16': 2, 's16': 2, 'u16': 2,
+    's8': 1, 'u8': 1, 'pred': 1,
+    'f8e4m3fn': 1, 'f8e5m2': 1, 'f8e4m3': 1, 'f8e5m2fnuz': 1, 'f8e4m3fnuz': 1,
+    's4': 1, 'u4': 1,
+}
+
+_COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+                'collective-permute')
+
+# no HBM traffic of their own
+_SKIP_OPS = {'parameter', 'constant', 'tuple', 'get-tuple-element', 'bitcast',
+             'after-all', 'partition-id', 'replica-id', 'iota', 'while',
+             'call', 'conditional', 'convert', 'copy-start', 'copy-done'}
+
+_SHAPE_RE = re.compile(r'([a-z0-9]+)\[([0-9,]*)\]')
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(',')]
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[int, int, int]:
+    """(total_bytes, total_elems, f32_bytes) over all array shapes (tuples
+    summed). f32_bytes feeds the TPU-bf16-equivalent adjustment: on this
+    CPU container XLA's FloatNormalization materializes every bf16 op at
+    f32; the TPU backend computes bf16 natively, so hot-loop f32 traffic
+    is counted at half width in the adjusted roofline terms."""
+    total_b = 0
+    total_e = 0
+    f32_b = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(','):
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dtype]
+        if dtype == 'f32':
+            f32_b += elems * 4
+    return total_b, total_e, f32_b
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_elems: int
+    out_dims: List[int]
+    operands: List[str]
+    raw: str
+    is_root: bool = False
+    out_f32_bytes: int = 0
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, Tuple[int, int, tuple]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def root(self) -> Optional[Instr]:
+        for i in self.instrs:
+            if i.is_root:
+                return i
+        return self.instrs[-1] if self.instrs else None
+
+
+_NAME_RE = re.compile(r'^(?:ENTRY\s+)?%?([\w\.\-]+)')
+_INSTR = re.compile(
+    r'^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*'
+    r'(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*'
+    r'([\w\-]+)\((.*)$')
+_OPERAND = re.compile(r'%([\w\.\-]+)')
+_CALLS_RE = re.compile(r'calls=%?([\w\.\-]+)')
+_BODY_RE = re.compile(r'body=%?([\w\.\-]+)')
+_COND_RE = re.compile(r'condition=%?([\w\.\-]+)')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r'constant\((\d+)\)')
+_CONTRACT_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            stripped = line.rstrip()
+            if stripped.endswith('{') and ('->' in stripped
+                                           or stripped.startswith(('ENTRY',
+                                                                   '%'))):
+                m = _NAME_RE.match(stripped)
+                if m:
+                    cur = Computation(name=m.group(1))
+                    comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == '}':
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        is_root, name, type_str, opcode, rest = mi.groups()
+        out_b, out_e, out_f32 = _shape_bytes_elems(type_str)
+        dims = _first_shape_dims(type_str)
+        paren = rest.split('),')[0] if '),' in rest else rest.rstrip(') ')
+        ops = _OPERAND.findall(paren)
+        cur.shapes[name] = (out_b, out_e, tuple(dims), out_f32)
+        cur.instrs.append(Instr(name=name, opcode=opcode, out_bytes=out_b,
+                                out_elems=out_e, out_dims=dims, operands=ops,
+                                raw=line, is_root=bool(is_root),
+                                out_f32_bytes=out_f32))
+    return comps
+
+
+def _while_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """computation name -> product of enclosing while trip counts."""
+    def trip_count(ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.raw)
+        if m:
+            return int(m.group(1))
+        mc = _COND_RE.search(ins.raw)
+        if mc and mc.group(1) in comps:
+            consts = [int(c) for i in comps[mc.group(1)].instrs
+                      for c in _CONST_RE.findall(i.raw)]
+            if consts:
+                return max(consts)
+        return 1
+
+    children: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    called: set = set()
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == 'while':
+                mb = _BODY_RE.search(ins.raw)
+                mc = _COND_RE.search(ins.raw)
+                if mb:
+                    tc = trip_count(ins)
+                    children[cname].append((mb.group(1), tc))
+                    called.add(mb.group(1))
+                    if mc:
+                        children[cname].append((mc.group(1), tc))
+                        called.add(mc.group(1))
+            else:
+                mcall = _CALLS_RE.search(ins.raw)
+                if mcall:
+                    children[cname].append((mcall.group(1), 1))
+                    called.add(mcall.group(1))
+                for mto in re.finditer(r'to_apply=%?([\w\.\-]+)', ins.raw):
+                    children[cname].append((mto.group(1), 1))
+                    called.add(mto.group(1))
+
+    mult: Dict[str, float] = {}
+
+    def assign(comp_name: str, m: float):
+        if mult.get(comp_name, 0) >= m:
+            return
+        mult[comp_name] = m
+        for child, tc in children.get(comp_name, ()):
+            assign(child, m * tc)
+
+    for cname in comps:
+        if cname not in called:
+            assign(cname, 1.0)
+    for cname in comps:
+        mult.setdefault(cname, 1.0)
+    return mult
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    mc = _CONTRACT_RE.search(ins.raw)
+    if not mc:
+        return 2.0 * ins.out_elems
+    lhs_dims: tuple = ()
+    if ins.operands:
+        entry = comp.shapes.get(ins.operands[0])
+        if entry:
+            lhs_dims = entry[2]
+    if not lhs_dims:
+        return 2.0 * ins.out_elems
+    contracted = 1
+    for i in (int(x) for x in mc.group(1).split(',') if x != ''):
+        if i < len(lhs_dims):
+            contracted *= lhs_dims[i]
+    return 2.0 * ins.out_elems * contracted
+
+
+_CONVERT_FUSION_OPS = {'parameter', 'convert', 'bitcast', 'copy',
+                       'get-tuple-element'}
+
+
+def _is_convert_like(ins: Instr, comps: Dict[str, Computation]) -> bool:
+    """True if the instruction is a pure precision/layout convert — fused
+    away on TPU (the MXU consumes bf16 natively), materialized only by the
+    CPU backend's float normalization."""
+    if ins.opcode == 'convert':
+        return True
+    if ins.opcode == 'fusion':
+        mcall = _CALLS_RE.search(ins.raw)
+        callee = comps.get(mcall.group(1)) if mcall else None
+        if callee is not None and callee.instrs and all(
+                i.opcode in _CONVERT_FUSION_OPS for i in callee.instrs):
+            return True
+    return False
+
+
+class _ByteModel:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        # producer map per computation: name -> Instr
+        self.producers = {cname: {i.name: i for i in c.instrs}
+                          for cname, c in comps.items()}
+
+    def effective_operand_bytes(self, comp: Computation, name: str,
+                                depth: int = 0) -> float:
+        """Bytes actually pulled from HBM for an operand — seeing through
+        pure-convert producers to the pre-convert width."""
+        prod = self.producers[comp.name].get(name)
+        entry = comp.shapes.get(name)
+        if prod is not None and depth < 4 \
+                and _is_convert_like(prod, self.comps) and prod.operands:
+            return sum(self.effective_operand_bytes(comp, o, depth + 1)
+                       for o in prod.operands)
+        return float(entry[0]) if entry else 0.0
+
+    def effective_operand_f32_bytes(self, comp: Computation, name: str,
+                                    depth: int = 0) -> float:
+        prod = self.producers[comp.name].get(name)
+        entry = comp.shapes.get(name)
+        if prod is not None and depth < 4 \
+                and _is_convert_like(prod, self.comps) and prod.operands:
+            return sum(self.effective_operand_f32_bytes(comp, o, depth + 1)
+                       for o in prod.operands)
+        return float(entry[3]) if entry and len(entry) > 3 else 0.0
+
+    def instr_f32_bytes(self, ins: Instr, comp: Computation) -> float:
+        """f32 share of instr_bytes (same accounting rules)."""
+        comps = self.comps
+        if ins.opcode in _SKIP_OPS or _is_convert_like(ins, comps):
+            return 0.0
+        if ins.opcode in ('slice', 'dynamic-slice', 'gather'):
+            return 2.0 * ins.out_f32_bytes
+        if ins.opcode == 'scatter':
+            if len(ins.operands) > 2:
+                e = comp.shapes.get(ins.operands[2])
+                return 2.0 * (e[3] if e and len(e) > 3 else 0.0)
+            return 0.0
+        if ins.opcode == 'dynamic-update-slice':
+            if len(ins.operands) > 1:
+                e = comp.shapes.get(ins.operands[1])
+                return 2.0 * (e[3] if e and len(e) > 3 else 0.0)
+            return 0.0
+        if ins.opcode == 'fusion':
+            mcall = _CALLS_RE.search(ins.raw)
+            callee = comps.get(mcall.group(1)) if mcall else None
+            if callee is not None:
+                dus = [i for i in callee.instrs
+                       if i.opcode == 'dynamic-update-slice']
+                if dus:
+                    total = 0.0
+                    for d in dus:
+                        if len(d.operands) > 1:
+                            e = callee.shapes.get(d.operands[1])
+                            total += 2.0 * (e[3] if e and len(e) > 3 else 0.0)
+                    return total
+        return sum(self.effective_operand_f32_bytes(comp, o)
+                   for o in ins.operands) + float(ins.out_f32_bytes)
+
+    def instr_bytes(self, ins: Instr, comp: Computation) -> float:
+        """HBM bytes for one top-level instruction (TPU semantics):
+        * converts/convert-fusions: 0 (fused on TPU),
+        * slice/dynamic-slice/gather: 2 × output (in-place read+write),
+        * dynamic-update-slice (and DUS-rooted fusions): 2 × update,
+        * scatter: 2 × updates operand,
+        * else: effective operand bytes + output bytes."""
+        comps = self.comps
+
+        def op_bytes(name: str) -> float:
+            return self.effective_operand_bytes(comp, name)
+
+        if ins.opcode in _SKIP_OPS:
+            return 0.0
+        if _is_convert_like(ins, comps):
+            return 0.0
+        if ins.opcode in ('slice', 'dynamic-slice', 'gather'):
+            return 2.0 * ins.out_bytes
+        if ins.opcode == 'scatter':
+            upd = op_bytes(ins.operands[2]) if len(ins.operands) > 2 else 0.0
+            return 2.0 * upd
+        if ins.opcode == 'dynamic-update-slice':
+            upd = op_bytes(ins.operands[1]) if len(ins.operands) > 1 else 0.0
+            return 2.0 * upd
+        if ins.opcode == 'fusion':
+            mcall = _CALLS_RE.search(ins.raw)
+            callee = comps.get(mcall.group(1)) if mcall else None
+            if callee is not None:
+                dus = [i for i in callee.instrs
+                       if i.opcode == 'dynamic-update-slice']
+                if dus:
+                    # in-place cache update (XLA aliases the destination):
+                    # traffic = read+write of each update slice only
+                    total = 0.0
+                    for d in dus:
+                        upd_entry = callee.shapes.get(d.operands[1]) \
+                            if len(d.operands) > 1 else None
+                        total += 2.0 * (upd_entry[0] if upd_entry else 0.0)
+                    return total
+        operand_bytes = sum(op_bytes(o) for o in ins.operands)
+        return operand_bytes + float(ins.out_bytes)
+
+
+def analyze(text: str) -> Dict[str, float]:
+    """Per-device totals from SPMD-partitioned HLO text."""
+    comps = parse_hlo(text)
+    mult = _while_multipliers(comps)
+
+    # computations that are fusion bodies / reducers: internal, no HBM traffic
+    internal = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            m = _CALLS_RE.search(ins.raw)
+            if m:
+                internal.add(m.group(1))
+            for mt in re.finditer(r'to_apply=%?([\w\.\-]+)', ins.raw):
+                internal.add(mt.group(1))
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    bytes_f32_hot = 0.0      # f32 traffic inside hot loops (mult > 1)
+    coll_f32_hot = 0.0
+    coll_bytes = {c: 0.0 for c in _COLLECTIVES}
+    coll_counts = {c: 0 for c in _COLLECTIVES}
+    model = _ByteModel(comps)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        for ins in comp.instrs:
+            if ins.opcode in ('dot', 'convolution'):
+                flops += m * _dot_flops(ins, comp)
+            if cname in internal:
+                continue          # fusion internals: no HBM traffic
+            hit_coll = False
+            for coll in _COLLECTIVES:
+                if ins.opcode.startswith(coll):
+                    ob = sum(model.effective_operand_bytes(comp, o)
+                             for o in ins.operands)
+                    if ob == 0:
+                        ob = ins.out_bytes
+                    coll_bytes[coll] += m * ob
+                    coll_counts[coll] += int(m)
+                    if m > 1:
+                        coll_f32_hot += m * sum(
+                            model.effective_operand_f32_bytes(comp, o)
+                            for o in ins.operands)
+                    hit_coll = True
+                    break
+            if hit_coll:
+                continue
+            bytes_accessed += m * model.instr_bytes(ins, comp)
+            if m > 1:
+                bytes_f32_hot += m * model.instr_f32_bytes(ins, comp)
+
+    total_coll = sum(coll_bytes.values())
+    return {
+        'flops': flops,
+        'bytes_accessed': bytes_accessed,
+        'collective_bytes': total_coll,
+        'collective_bytes_by_op': coll_bytes,
+        'collective_counts': coll_counts,
+        # TPU-bf16-equivalent: hot-loop f32 tensors are CPU FloatNormalization
+        # artifacts of bf16 ops (params/grads/opt-state f32 live outside the
+        # layer scans); the TPU backend keeps them bf16 → half width.
+        'bytes_f32_hot': bytes_f32_hot,
+        'collective_f32_hot': coll_f32_hot,
+        'bytes_accessed_bf16eq': bytes_accessed - 0.5 * bytes_f32_hot,
+        'collective_bytes_bf16eq': total_coll - 0.5 * coll_f32_hot,
+    }
+
+
+# --------------------------------------------------------------------------
+# roofline terms (TPU v5e constants from the assignment)
+# --------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def roofline_terms(per_device: Dict[str, float]) -> Dict[str, float]:
+    """Three roofline times (seconds) for the per-device workload. When the
+    dtype-split is present, bf16-equivalent terms (see analyze()) are
+    reported alongside the raw (conservative) ones."""
+    t_compute = per_device['flops'] / PEAK_FLOPS_BF16
+    t_memory = per_device['bytes_accessed'] / HBM_BW
+    t_coll = per_device['collective_bytes'] / ICI_BW
+    dominant = max(('compute', t_compute), ('memory', t_memory),
+                   ('collective', t_coll), key=lambda kv: kv[1])[0]
+    out = {'t_compute_s': t_compute, 't_memory_s': t_memory,
+           't_collective_s': t_coll, 'dominant': dominant}
+    if 'bytes_accessed_bf16eq' in per_device:
+        out['t_memory_bf16eq_s'] = (per_device['bytes_accessed_bf16eq']
+                                    / HBM_BW)
+        out['t_collective_bf16eq_s'] = (per_device['collective_bytes_bf16eq']
+                                        / ICI_BW)
+    return out

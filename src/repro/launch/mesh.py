@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+
+  single-pod : (data=16, model=16)            = 256 chips  (TPU v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+The 'pod' axis is pure data parallelism over the slow inter-pod links
+(gradient all-reduce only — optionally int8-compressed, core.compression);
+'data' is intra-pod DP/FSDP; 'model' is TP/EP/SP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (real or fake) local devices exist —
+    used by sharding unit tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    axis_types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ('data', 'model'),
+                         axis_types=axis_types)

@@ -1,0 +1,108 @@
+import os
+if 'XLA_FLAGS' not in os.environ:
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'
+"""Per-op roofline breakdown for one dry-run cell: top-K byte contributors,
+collective ops with shapes, and dot flops — the 'profile' the §Perf loop
+iterates on (no real hardware: the lowered HLO is the profile).
+
+  python -m repro.launch.profile --arch mistral-nemo-12b --shape train_4k \
+      [--mesh single] [--top 25]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.launch import hlo_analysis as ha
+from repro.launch import sharding as shr, specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.sharding_rules import logical_axis_rules
+
+
+def breakdown(text: str, top: int = 25):
+    comps = ha.parse_hlo(text)
+    mult = ha._while_multipliers(comps)
+    internal = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            m = ha._CALLS_RE.search(ins.raw)
+            if m:
+                internal.add(m.group(1))
+            for mt in re.finditer(r'to_apply=%?([\w\.\-]+)', ins.raw):
+                internal.add(mt.group(1))
+    model = ha._ByteModel(comps)
+    byte_rows, coll_rows, flop_rows = [], [], []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        for ins in comp.instrs:
+            if ins.opcode in ('dot', 'convolution'):
+                flop_rows.append((m * ha._dot_flops(ins, comp), m, cname,
+                                  ins.raw.strip()[:150]))
+            if cname in internal:
+                continue
+            is_coll = any(ins.opcode.startswith(c) for c in ha._COLLECTIVES)
+            if is_coll:
+                ob = sum(model.effective_operand_bytes(comp, o)
+                         for o in ins.operands) or ins.out_bytes
+                coll_rows.append((m * ob, m, ins.opcode, cname,
+                                  ins.raw.strip()[:170]))
+            else:
+                b = m * model.instr_bytes(ins, comp)
+                if b > 0:
+                    byte_rows.append((b, m, ins.opcode, cname,
+                                      ins.raw.strip()[:150]))
+    out = []
+    for title, rows in (('BYTES', byte_rows), ('COLLECTIVES', coll_rows),
+                        ('DOT FLOPS', flop_rows)):
+        rows.sort(reverse=True)
+        total = sum(r[0] for r in rows)
+        out.append(f'== {title}: total {total:.3e} ==')
+        for r in rows[:top]:
+            out.append(f'  {r[0]:.3e} (x{r[1]:.0f}) | ' +
+                       ' | '.join(str(x) for x in r[2:]))
+    return '\n'.join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', required=True)
+    ap.add_argument('--shape', required=True)
+    ap.add_argument('--mesh', default='single', choices=['single', 'multi'])
+    ap.add_argument('--top', type=int, default=25)
+    ap.add_argument('--microbatches', type=int, default=None)
+    ap.add_argument('--remat-policy', default=None)
+    ap.add_argument('--dump', default='')
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import _shardings_for_cell
+    multi = args.mesh == 'multi'
+    mesh = make_production_mesh(multi_pod=multi)
+    fn, args_abstract, spec = specs_mod.make_cell_fns(
+        args.arch, args.shape, microbatches=args.microbatches,
+        remat_policy=args.remat_policy)
+    cfg = spec['cfg']
+    in_spec_tree = _shardings_for_cell(spec, args_abstract, mesh, multi)
+    in_shardings = shr.as_shardings(in_spec_tree, mesh)
+    rules = shr.activation_rules(
+        multi_pod=multi, batch_shardable=spec['global_batch'] > 1,
+        expert_shard='ep' if (cfg.moe and cfg.moe.n_experts % 16 == 0)
+        else 'tp',
+        seq_sharding=spec['kind'] != 'decode')
+    donate = (0,) if spec['kind'] == 'train' else (2,)
+    with mesh, logical_axis_rules(rules):
+        compiled = jax.jit(fn, in_shardings=in_shardings,
+                           donate_argnums=donate).lower(
+                               *args_abstract).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, 'w') as f:
+            f.write(text)
+    print(breakdown(text, args.top))
+    mem = compiled.memory_analysis()
+    print(f'mem/dev: arg {mem.argument_size_in_bytes/2**30:.2f} + temp '
+          f'{mem.temp_size_in_bytes/2**30:.2f} GiB (alias '
+          f'{mem.alias_size_in_bytes/2**30:.2f})')
+
+
+if __name__ == '__main__':
+    main()

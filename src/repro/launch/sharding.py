@@ -1,0 +1,257 @@
+"""PartitionSpec rules: parameters, optimizer state, activations, caches.
+
+Parameter rules (path/name-based; leading axis of block params is the scan
+repeat dim, never sharded):
+
+  embed / lm_head (V, d)            : P(model, data)      vocab-parallel
+  wq/wk/wv, w_gate/w_in (d_in, out) : P(data, model)      Megatron col-par + FSDP
+  wo/w_out (in, d_out)              : P(model, data)      Megatron row-par + FSDP
+  MoE experts (E, d, f)             : EP  → P(model on E, data on d)
+                                      TP  → P(data on d, model on f)
+                                      (per-arch: E % 16 == 0 ? EP : TP)
+  router (d, E)                     : P(data, None)
+  mamba in_proj (d, X)              : P(data, model)
+  mamba out_proj (di, d)            : P(model, data)
+  conv_w (K, C)                     : P(None, model)
+  rank-0/1 (norms, A_log, ...)      : replicated
+
+SM3 accumulator rule: the accumulator that keeps axis a of a parameter
+sharded P(s_0..s_p) is sharded P(None..s_a..None) — i.e. the cover-set
+statistics live *with* their slices; no optimizer-state collectives are
+ever needed beyond what the gradient already required. (This is the part
+of the paper that interacts with distribution — DESIGN.md §3.)
+
+Momentum/Adam/Adagrad state: same spec as the parameter. Adafactor
+vr/vc: the parameter spec minus the reduced axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import base as opt_base
+from repro.core import baselines, sm3 as sm3_mod
+from repro.core.compression import EFState
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def _param_rule(path: Tuple[str, ...], shape: Tuple[int, ...],
+                expert_shard: str) -> P:
+    name = path[-1]
+    stacked = path[0] == 'blocks'           # leading repeat axis
+    lead = (None,) if stacked else ()
+    rank = len(shape) - len(lead)
+
+    if name in ('embed', 'lm_head'):
+        return P('model', 'data')
+    if rank <= 1:
+        return P(*(lead + (None,) * rank))
+    if 'experts' in path or ('moe' in path and 'shared' in path):
+        # routed expert bank (E, d, f): EP if E divides the model axis,
+        # else TP within each (replicated) expert. The *shared*-expert bank
+        # (DeepSeek) is tiny (2 experts): pure TP on f, with d REPLICATED —
+        # FSDP-sharding d puts the 'data' axis on a contraction dim, which
+        # forces SPMD to replicate the (tokens, d) operand and all-reduce a
+        # full microbatch per layer (measured 1 GiB × layers × microbatches
+        # on deepseek train_4k; EXPERIMENTS.md §Perf iteration D2).
+        if 'shared' in path:
+            spec = (None, None, 'model') if name in ('w_gate', 'w_in') \
+                else (None, 'model', None)
+            return P(*(lead + spec))
+        if name in ('w_gate', 'w_in'):      # (E, d, f)
+            spec = ('model', 'data', None) if expert_shard == 'ep' \
+                else (None, 'data', 'model')
+        else:                               # w_out (E, f, d)
+            spec = ('model', None, 'data') if expert_shard == 'ep' \
+                else (None, 'model', 'data')
+        return P(*(lead + spec))
+    if name == 'router':
+        return P(*(lead + ('data', None)))
+    if name in ('wq', 'wk', 'wv', 'w_gate', 'w_in') \
+            or name.startswith('in_proj'):
+        return P(*(lead + ('data', 'model')))
+    if name in ('wo', 'w_out', 'out_proj'):
+        return P(*(lead + ('model', 'data')))
+    if name == 'conv_w':
+        return P(*(lead + (None, 'model')))
+    return P(*(lead + (None,) * rank))      # fallback: replicated
+
+
+def param_specs(params_shape: PyTree, expert_shard: str = 'tp') -> PyTree:
+    """Map a params shape-tree (ShapeDtypeStructs or arrays) to specs."""
+    def rule(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        return _param_rule(keys, tuple(leaf.shape), expert_shard)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _key_str(k) -> str:
+    for attr in ('key', 'name'):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    if hasattr(k, 'idx'):
+        return f'#{k.idx}'
+    return str(k)
+
+
+# --------------------------------------------------------------------------
+# optimizer-state specs (pattern-matched on the state NamedTuples)
+# --------------------------------------------------------------------------
+
+def _sm3_acc_spec(pspec: P, acc_shape: Tuple[int, ...]) -> P:
+    """Accumulator keeping axis a (its only non-1 axis) inherits s_a."""
+    if all(s == 1 for s in acc_shape):          # degenerate
+        return P(*(None,) * len(acc_shape))
+    entries = []
+    for dim, s in enumerate(acc_shape):
+        if s != 1 and dim < len(pspec):
+            entries.append(pspec[dim])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree) -> PyTree:
+    """Build a spec tree congruent with the optimizer state.
+
+    Handles the chained states produced by core.base.chain over the
+    optimizers in this repo.
+    """
+    def handle(state):
+        if isinstance(state, tuple) and not hasattr(state, '_fields'):
+            return tuple(handle(s) for s in state)
+        if state is None:
+            return None
+        t = type(state).__name__
+        if t == 'SM3State':
+            # mu: per-param tuple of co-dim-1 accumulators
+            def leaf_rule(pspec, mu_tuple):
+                return tuple(_sm3_acc_spec(pspec, tuple(acc.shape))
+                             for acc in mu_tuple)
+            mu = jax.tree.map(leaf_rule, pspecs, state.mu,
+                              is_leaf=lambda x: isinstance(x, P))
+            return sm3_mod.SM3State(mu=mu)
+        if t == 'TraceState':
+            return type(state)(momentum=pspecs)
+        if t == 'AdamState':
+            return type(state)(count=P(), m=pspecs, v=pspecs)
+        if t == 'AdagradState':
+            return type(state)(gamma=pspecs)
+        if t == 'AdafactorState':
+            def vr_rule(pspec, vr):
+                n = len(vr.shape)
+                return P(*tuple(pspec)[:n]) if n else P()
+            def vc_rule(pspec, vc):
+                if vc.ndim and vc.shape[0] == 0:
+                    return P(None)
+                n = len(vc.shape)
+                if n == 0:
+                    return P()
+                ps = tuple(pspec)
+                return P(*(ps[:n - 1] + (ps[-1],)))
+            vr = jax.tree.map(vr_rule, pspecs, state.vr,
+                              is_leaf=lambda x: isinstance(x, P))
+            vc = jax.tree.map(vc_rule, pspecs, state.vc,
+                              is_leaf=lambda x: isinstance(x, P))
+            return type(state)(count=P(), vr=vr, vc=vc)
+        if t in ('ScaleByLrState',):
+            return type(state)(count=P())
+        if t in ('EmptyState', 'ClipByGlobalNormState'):
+            return state  # no array leaves
+        raise ValueError(f'unknown optimizer state {t}')
+
+    return handle(opt_state_shape)
+
+
+def train_state_specs(state_shape, pspecs) -> PyTree:
+    """Specs for trainer.TrainState."""
+    from repro.train.trainer import TrainState
+    ef = None
+    if state_shape.ef is not None:
+        ef = EFState(residual=pspecs)
+    return TrainState(step=P(),
+                      params=pspecs,
+                      opt_state=opt_state_specs(state_shape.opt_state, pspecs),
+                      ef=ef)
+
+
+# --------------------------------------------------------------------------
+# activation logical rules + cache specs
+# --------------------------------------------------------------------------
+
+def activation_rules(*, multi_pod: bool, batch_shardable: bool = True,
+                     expert_shard: str = 'tp',
+                     seq_sharding: bool = True) -> Dict[str, Any]:
+    batch = (('pod', 'data') if multi_pod else 'data') if batch_shardable \
+        else None
+    return {
+        'batch': batch,
+        'seq': None,
+        'seq_sp': 'model' if seq_sharding else None,  # Megatron-SP region
+        'embed': None,
+        'heads': 'model',
+        'heads_merged': 'model',
+        'ffn': 'model',
+        'vocab': 'model',
+        # EP: experts own the model axis, so the per-expert ffn dim must not
+        # also map to it (a spec may use each mesh axis once). TP: reversed.
+        'expert': 'model' if expert_shard == 'ep' else None,
+        'expert_ffn': None if expert_shard == 'ep' else 'model',
+        'expert_embed': None,
+        'batch_seq': batch,
+        'kv_seq': 'model',
+    }
+
+
+def batch_specs(multi_pod: bool, batch_shardable: bool = True,
+                has_modality: bool = False) -> Dict[str, P]:
+    b = (('pod', 'data') if multi_pod else 'data') if batch_shardable else None
+    out = {'tokens': P(b, None), 'targets': P(b, None), 'mask': P(b, None)}
+    if has_modality:
+        out['modality_embeds'] = P(b, None, None)
+    return out
+
+
+def cache_specs(cache_shape: PyTree, *, kv_shard: str, multi_pod: bool,
+                batch_shardable: bool = True) -> PyTree:
+    """Cache layout: stacked (R, B, ...) per position.
+
+    kv_shard='heads': (R,B,S,H,hd) → P(None, batch, None, 'model', None)
+    kv_shard='seq'  : (R,B,S,H,hd) → P(None, batch, 'model', None, None)
+    mamba ssd state (R,B,H,P,N)    → P(None, batch, 'model', None, None)
+    conv state (R,B,K-1,C)         → P(None, batch, None, 'model')
+    pos (R,B,S)                    → P(None, batch, None)
+    cross xk/xv (R,B,M,H,hd)       → like kv (S→M)
+    """
+    b = (('pod', 'data') if multi_pod else 'data') if batch_shardable else None
+
+    def rule(path, leaf):
+        name = _key_str(path[-1])
+        nd = len(leaf.shape)
+        if name in ('k', 'v', 'xk', 'xv'):
+            if kv_shard == 'heads':
+                return P(None, b, None, 'model', None)
+            return P(None, b, 'model', None, None)
+        if name == 'pos':
+            return P(None, b, None)
+        if name == 'ssd':
+            return P(None, b, 'model', None, None)
+        if name == 'conv':
+            return P(None, b, None, 'model')
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def as_shardings(spec_tree: PyTree, mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,150 @@
+"""Shape grid + ShapeDtypeStruct input specs for every dry-run cell.
+
+Assigned LM shape set (the same 4 for every arch):
+
+  train_4k    : seq 4096,   global_batch 256   → train_step
+  prefill_32k : seq 32768,  global_batch 32    → prefill (serve)
+  decode_32k  : KV 32768,   global_batch 128   → serve_step (1 new token)
+  long_500k   : KV 524288,  global_batch 1     → serve_step; only for
+                sub-quadratic archs (META['long_500k']); skip reasons are
+                recorded by the dry-run and in DESIGN.md §5.
+
+All inputs are ShapeDtypeStructs (zero allocation); shardings come from
+launch.sharding. Modality stubs: [vlm] gets (B, 1600, d) patch embeddings;
+[audio] tokens are already EnCodec codes (vocab native).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    'train_4k': {'kind': 'train', 'seq': 4096, 'global_batch': 256},
+    'prefill_32k': {'kind': 'prefill', 'seq': 32768, 'global_batch': 32},
+    'decode_32k': {'kind': 'decode', 'seq': 32768, 'global_batch': 128},
+    'long_500k': {'kind': 'decode', 'seq': 524288, 'global_batch': 1},
+}
+
+
+def cell_enabled(arch: str, shape_name: str) -> Tuple[bool, str]:
+    _, meta = get_config(arch)
+    if shape_name == 'long_500k' and not meta.get('long_500k', False):
+        return False, ('full-attention arch: 500k dense decode is out of '
+                       'regime (DESIGN.md §5)')
+    return True, ''
+
+
+def grid():
+    """All enabled (arch, shape) cells."""
+    from repro.configs import ASSIGNED_ARCHS
+    for arch in ASSIGNED_ARCHS:
+        for shape_name in SHAPES:
+            ok, _ = cell_enabled(arch, shape_name)
+            if ok:
+                yield arch, shape_name
+
+
+def _cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, max_len, dtype))
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Abstract inputs for the cell's step function.
+
+    train  : {'batch': {...}}
+    prefill: {'tokens', 'caches'}
+    decode : {'tokens', 'caches', 'index'}
+    """
+    cfg, meta = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, L = sh['global_batch'], sh['seq']
+    kind = sh['kind']
+    out: Dict[str, Any] = {'kind': kind, 'cfg': cfg, 'meta': meta,
+                           'global_batch': B, 'seq': L}
+
+    if kind == 'train':
+        batch = {'tokens': S((B, L), jnp.int32),
+                 'targets': S((B, L), jnp.int32),
+                 'mask': S((B, L), jnp.float32)}
+        if cfg.family == 'vlm':
+            batch['modality_embeds'] = S(
+                (B, cfg.n_modality_tokens, cfg.d_model), jnp.bfloat16)
+        out['batch'] = batch
+    elif kind == 'prefill':
+        out['tokens'] = S((B, L), jnp.int32)
+        out['caches'] = _cache_shapes(cfg, B, L)
+        if cfg.family == 'vlm':
+            out['modality_embeds'] = S(
+                (B, cfg.n_modality_tokens, cfg.d_model), jnp.bfloat16)
+    else:  # decode
+        out['tokens'] = S((B, 1), jnp.int32)
+        out['caches'] = _cache_shapes(cfg, B, L)
+        out['index'] = S((), jnp.int32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# step functions to lower per kind
+# --------------------------------------------------------------------------
+
+def make_cell_fns(arch: str, shape_name: str, optimizer=None,
+                  microbatches: Optional[int] = None,
+                  remat_policy: Optional[str] = None):
+    """Returns (fn, abstract_args: tuple) ready for jax.jit(...).lower."""
+    from repro.core import make_optimizer
+    from repro.core.base import OptimizerSpec
+    from repro.train import trainer
+
+    spec = input_specs(arch, shape_name)
+    cfg: ModelConfig = spec['cfg']
+    kind = spec['kind']
+
+    if kind == 'train':
+        optimizer = optimizer or make_optimizer(
+            OptimizerSpec(name='sm3', learning_rate=0.1,
+                          extra={'warmup_steps': 1000}))
+        mb = microbatches or spec['meta'].get('microbatches', {}).get(
+            shape_name, 1)
+        policy_name = remat_policy or spec['meta'].get('remat_policy')
+        policy = (getattr(jax.checkpoint_policies, policy_name)
+                  if policy_name else None)
+        step = trainer.make_train_step(cfg, optimizer, microbatches=mb,
+                                       remat=True, remat_policy=policy)
+        state_shape = jax.eval_shape(
+            lambda: trainer.init_state(jax.random.PRNGKey(0), cfg, optimizer))
+        return step, (state_shape, spec['batch']), spec
+
+    if kind == 'prefill':
+        me = spec.get('modality_embeds')
+
+        def prefill_fn(params, tokens, caches, modality_embeds=None):
+            return lm.prefill(params, tokens, cfg, caches,
+                              modality_embeds=modality_embeds)
+
+        params_shape = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        args = (params_shape, spec['tokens'], spec['caches'])
+        if me is not None:
+            args = args + (me,)
+        return prefill_fn, args, spec
+
+    # decode
+    def decode_fn(params, tokens, caches, index):
+        return lm.decode_step(params, tokens, cfg, caches, index)
+
+    params_shape = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    return decode_fn, (params_shape, spec['tokens'], spec['caches'],
+                       spec['index']), spec

@@ -1,0 +1,117 @@
+"""Production training entry point: pjit over the pod mesh.
+
+    python -m repro.launch.train --arch stablelm-1.6b --steps 100 \
+        [--devices 8] [--data 4] [--model 2] [--optimizer sm3] \
+        [--microbatches 2] [--ckpt DIR] [--compression int8]
+
+On real hardware jax picks up the TPU topology; for local rehearsal pass
+--devices N to fake N host devices (set before jax init — this module does
+it first). The full 512-chip lowering rehearsal is launch/dryrun.py.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='stablelm-1.6b')
+    ap.add_argument('--reduced', action='store_true',
+                    help='use the reduced (CPU-sized) config')
+    ap.add_argument('--steps', type=int, default=50)
+    ap.add_argument('--optimizer', default='sm3')
+    ap.add_argument('--lr', type=float, default=0.1)
+    ap.add_argument('--warmup', type=int, default=10)
+    ap.add_argument('--global-batch', type=int, default=8)
+    ap.add_argument('--seq', type=int, default=64)
+    ap.add_argument('--microbatches', type=int, default=1)
+    ap.add_argument('--devices', type=int, default=0,
+                    help='fake host device count (0 = real devices)')
+    ap.add_argument('--data', type=int, default=1)
+    ap.add_argument('--model', type=int, default=1)
+    ap.add_argument('--ckpt', default='')
+    ap.add_argument('--ckpt-every', type=int, default=0)
+    ap.add_argument('--compression', default='',
+                    choices=['', 'int8'])
+    ap.add_argument('--log-every', type=int, default=10)
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.devices:
+        os.environ['XLA_FLAGS'] = (
+            f'--xla_force_host_platform_device_count={args.devices}')
+
+    import jax
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.core import make_optimizer
+    from repro.core.base import OptimizerSpec
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch import sharding as shr
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding_rules import logical_axis_rules
+    from repro.train import trainer
+
+    cfg, meta = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(seq=args.seq)
+    opt = make_optimizer(
+        OptimizerSpec(name=args.optimizer, learning_rate=args.lr,
+                      extra={'warmup_steps': args.warmup}),
+        total_steps=args.steps, d_model=cfg.d_model)
+
+    mesh = make_host_mesh(data=args.data, model=args.model)
+    print(f'mesh: {dict(mesh.shape)} over {mesh.size} devices')
+    expert_shard = 'ep' if (cfg.moe and
+                            cfg.moe.n_experts % mesh.shape['model'] == 0
+                            and cfg.moe.n_experts >= mesh.shape['model']) \
+        else 'tp'
+    rules = shr.activation_rules(multi_pod=False, expert_shard=expert_shard)
+
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt,
+                               use_compression=args.compression == 'int8')
+    pspecs = shr.param_specs(jax.eval_shape(lambda: state.params),
+                             expert_shard)
+    sspecs = shr.train_state_specs(jax.eval_shape(lambda: state), pspecs)
+    bspecs = shr.batch_specs(multi_pod=False,
+                             has_modality=cfg.family == 'vlm')
+
+    mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            print(f'auto-resuming from step {latest}')
+            state = mgr.restore(latest, state)
+
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.global_batch))
+    with mesh, logical_axis_rules(rules):
+        state = jax.device_put(state, shr.as_shardings(sspecs, mesh))
+        step_fn = jax.jit(
+            trainer.make_train_step(cfg, opt,
+                                    microbatches=args.microbatches,
+                                    pod_compression=args.compression or None,
+                                    mesh=mesh if args.compression else None),
+            in_shardings=shr.as_shardings((sspecs, bspecs), mesh),
+            donate_argnums=0)
+        import time
+        t0 = time.perf_counter()
+        for t in range(int(state.step), args.steps):
+            state, metrics = step_fn(state, ds.global_batch_at(t))
+            if t % args.log_every == 0 or t == args.steps - 1:
+                print(f'step {t:5d}  loss {float(metrics["loss"]):.4f}  '
+                      f'acc {float(metrics["accuracy"]):.3f}  '
+                      f'{time.perf_counter() - t0:.0f}s', flush=True)
+            if mgr is not None and args.ckpt_every \
+                    and (t + 1) % args.ckpt_every == 0:
+                mgr.save(int(state.step), state, blocking=False)
+    if mgr is not None:
+        mgr.save(int(state.step), state)
+        mgr.wait()
+    print('done')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,173 @@
+"""Model configuration covering all assigned architecture families.
+
+A model is a decoder-only LM backbone assembled from a repeating
+``block_pattern`` of block kinds, scanned ``n_repeats`` times:
+
+  kind        layer
+  ----        -----
+  'dense'     self-attn (GQA, optional SWA) + gated MLP
+  'moe'       self-attn + mixture-of-experts MLP (shared + routed experts)
+  'mamba2'    Mamba-2 SSD block (attention-free)
+  'cross'     self-attn + cross-attn over modality embeddings + MLP   [vlm]
+  'shared'    transformer block with ONE shared parameter copy applied at
+              every occurrence (Zamba2-style); params live outside the scan
+
+len(block_pattern) * n_repeats == n_layers. Homogeneous stacks use a
+1-element pattern. [audio]/[vlm] modality frontends are stubs: inputs arrive
+as precomputed frame/patch embeddings via input_specs() (see launch.specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    n_shared_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    group_size: int = 4096       # GShard dispatch group (tokens), training
+    serve_group_size: int = 1024  # smaller groups bound serve-prefill memory
+    serve_capacity_factor: float = 2.0  # prefill cap (decode stays dropless)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256          # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 12
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_ff: int = 2048
+    vocab: int = 32000
+    block_pattern: Tuple[str, ...] = ('dense',)
+    n_repeats: int = 12
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    sliding_window: Optional[int] = None   # SWA width (tokens), None = full
+    attn_chunk: Optional[int] = None       # online-softmax KV-chunk (train/
+                                           # prefill); None = dense S×T scores
+    n_modality_tokens: int = 0             # vlm/audio stub embedding count
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    head_dim_override: Optional[int] = None  # e.g. mistral-nemo: 128 ≠ d/H
+    param_dtype: str = 'float32'           # smoke: f32; dry-run cfgs: bf16
+    activation_dtype: str = 'float32'
+    max_seq_len: int = 4096
+
+    def __post_init__(self):
+        assert len(self.block_pattern) * self.n_repeats == self.n_layers, \
+            (self.name, self.block_pattern, self.n_repeats, self.n_layers)
+        assert self.n_heads % self.n_kv_heads == 0
+        if any(k == 'moe' for k in self.block_pattern):
+            assert self.moe is not None
+        if any(k == 'mamba2' for k in self.block_pattern):
+            assert self.ssm is not None
+
+    @property
+    def head_dim(self) -> int:
+        return self.head_dim_override or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows: vocab rounded up to a multiple of 16 so the
+        vocab dim shards over the model axis (standard production padding;
+        e.g. mamba2's 50280 → 50288). Logits of padded ids are masked to
+        -inf in the loss and sampler."""
+        m = 16
+        return ((self.vocab + m - 1) // m) * m
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params; used for 6ND)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim
+        counts = {'embed': v * d, 'final_norm': d}
+        if not self.tie_embeddings:
+            counts['lm_head'] = v * d
+        per_kind = {}
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d + 2 * d  # q,k,v,o + 2 norms
+        mlp = 3 * d * f  # gated (SwiGLU): w_in, w_gate, w_out
+        per_kind['dense'] = attn + mlp
+        if self.moe:
+            e = self.moe
+            routed = e.n_experts * 3 * d * f
+            shared = e.n_shared_experts * 3 * d * f
+            router = d * e.n_experts
+            per_kind['moe'] = attn + routed + shared + router
+        if self.ssm:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            in_proj = d * (2 * di + 2 * s.d_state + nh)
+            conv = (s.d_conv + 1) * (di + 2 * s.d_state)  # kernel + bias
+            out = di * d + di  # out_proj + gate norm weight
+            per_kind['mamba2'] = in_proj + conv + out + 3 * nh + d  # A,D,dt_b,norm
+        per_kind['cross'] = per_kind['dense'] + 2 * d * (self.n_kv_heads * hd) \
+            + d * (self.n_heads * hd) + (self.n_heads * hd) * d + d
+        per_kind['shared'] = 0  # counted once below
+        total = sum(counts.values())
+        for kind in self.block_pattern:
+            total += per_kind[kind] * self.n_repeats if kind != 'shared' else 0
+        if 'shared' in self.block_pattern:
+            total += per_kind['dense']  # one shared copy
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k + shared experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        e = self.moe
+        inactive_experts = e.n_experts - e.top_k
+        dead = inactive_experts * 3 * d * f
+        n_moe = sum(1 for k in self.block_pattern if k == 'moe') * self.n_repeats
+        return int(self.param_count() - dead * n_moe)
+
+    def reduced(self, vocab: int = 512, d_model: int = 64, d_ff: int = 128,
+                n_repeats: int = 2, seq: int = 64) -> 'ModelConfig':
+        """Tiny same-family config for CPU smoke tests."""
+        heads = max(2, min(4, self.n_heads))
+        kv = heads if self.n_kv_heads == self.n_heads else max(1, heads // 2)
+        moe = None
+        if self.moe:
+            moe = dataclasses.replace(self.moe,
+                                      n_experts=min(4, self.moe.n_experts),
+                                      top_k=min(2, self.moe.top_k),
+                                      group_size=32)
+        ssm = None
+        if self.ssm:
+            ssm = dataclasses.replace(self.ssm, d_state=16, head_dim=16,
+                                      chunk=16)
+        return dataclasses.replace(
+            self, d_model=d_model, d_ff=d_ff, vocab=vocab,
+            n_heads=heads, n_kv_heads=kv,
+            n_layers=len(self.block_pattern) * n_repeats,
+            n_repeats=n_repeats, moe=moe, ssm=ssm,
+            sliding_window=min(self.sliding_window, seq // 2)
+            if self.sliding_window else None,
+            n_modality_tokens=min(self.n_modality_tokens, 8),
+            param_dtype='float32', activation_dtype='float32',
+            max_seq_len=seq)

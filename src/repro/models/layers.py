@@ -1,0 +1,384 @@
+"""Transformer layer zoo: RMSNorm, RoPE, GQA/SWA self-attention,
+cross-attention, gated MLP, GShard-style MoE. Pure-functional: params are
+nested dicts of jnp arrays; every block kind exposes init_<kind>(key, cfg)
+and apply via ``block_apply``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.sharding_rules import lshard
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self, GQA, optional sliding window; cross for VLM)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / np.sqrt(d) / np.sqrt(2 * cfg.n_layers)
+    p = {
+        'wq': _dense_init(ks[0], (d, cfg.n_heads * hd), dt),
+        'wk': _dense_init(ks[1], (d, cfg.n_kv_heads * hd), dt),
+        'wv': _dense_init(ks[2], (d, cfg.n_kv_heads * hd), dt),
+        'wo': _dense_init(ks[3], (cfg.n_heads * hd, d), dt, scale=out_scale),
+    }
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd)  k: (B,T,Hkv,hd) → (B,Hkv,H/Hkv,S,T)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    q = q.reshape(B, S, Hkv, H // Hkv, hd)
+    return jnp.einsum('bskgh,btkh->bkgst', q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(probs, v):
+    """probs: (B,Hkv,G,S,T)  v: (B,T,Hkv,hd) → (B,S,H,hd)."""
+    B, Hkv, G, S, T = probs.shape
+    out = jnp.einsum('bkgst,btkh->bskgh', probs, v)
+    return out.reshape(B, S, Hkv * G, v.shape[-1])
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    """q_pos: (B,S) k_pos: (B,T) → bool (B,1,1,S,T); True = attend."""
+    diff = q_pos[:, :, None] - k_pos[:, None, :]       # (B,S,T)
+    mask = diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask[:, None, None, :, :]
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, window: Optional[int],
+                      chunk: int, adt) -> jnp.ndarray:
+    """Online-softmax (flash-style) attention over KV chunks via lax.scan.
+
+    Never materializes the (S, T) score matrix — per chunk only (S, C) —
+    bounding attention memory at O(S·C) instead of O(S²). q (B,S,H,hd);
+    k/v (B,T,Hkv,hd); returns (B,S,H,hd). Numerics match dense attention
+    (tested): running max m, normalizer l, and output accumulator are
+    rescaled per chunk. Fully-masked chunks contribute nothing.
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    C = T // chunk
+    qr = q.reshape(B, S, Hkv, G, hd)
+
+    kc = jnp.moveaxis(k.reshape(B, C, chunk, Hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, C, chunk, Hkv, hd), 1, 0)
+    kpc = jnp.moveaxis(k_pos.reshape(B, C, chunk), 1, 0)
+
+    m0 = jnp.full((B, Hkv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, hd), jnp.float32)
+
+    inv_sqrt = 1.0 / np.sqrt(hd)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, kp_i = inp
+        s = jnp.einsum('bskgh,btkh->bkgst', qr, k_i,
+                       preferred_element_type=jnp.float32) * inv_sqrt
+        diff = q_pos[:, :, None] - kp_i[:, None, :]     # (B,S,Ck)
+        mask = diff >= 0
+        if window is not None:
+            mask &= diff < window
+        s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # exp(-inf - -inf) guard: rows with no valid key keep m = -inf
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            'bkgst,btkh->bkgsh', p.astype(adt), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpc))
+    out = acc / jnp.maximum(l, 1e-38)[..., None]     # (B,Hkv,G,S,hd)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4))        # (B,S,Hkv,G,hd)
+    return out.reshape(B, S, H, hd).astype(adt)
+
+
+def attention_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                    positions: jnp.ndarray,
+                    cache: Optional[Params] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    kv_src: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self- or cross-attention.
+
+    Modes:
+      train/prefill: cache=None or fresh cache → causal (+SWA) over x itself;
+        if cache is given it is filled and returned (prefill).
+      decode: cache given with cache_index = current position; x is (B,1,d).
+      cross: kv_src (B,M,d) modality embeddings; no mask, no rope on kv;
+        cache stores the projected kv once (computed when cache_index==0 is
+        irrelevant — kv is static, so we always recompute in prefill and
+        reuse in decode via the cache).
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    adt = jnp.dtype(cfg.activation_dtype)
+    q = _split_heads(x @ p['wq'].astype(adt), cfg.n_heads, hd)
+    is_cross = kv_src is not None or (cache is not None and 'xk' in cache)
+
+    if is_cross:
+        if kv_src is not None:  # (re)compute projected modality kv
+            k = _split_heads(kv_src @ p['wk'].astype(adt), cfg.n_kv_heads, hd)
+            v = _split_heads(kv_src @ p['wv'].astype(adt), cfg.n_kv_heads, hd)
+            if cache is not None:
+                cache = dict(cache, xk=k.astype(cache['xk'].dtype),
+                             xv=v.astype(cache['xv'].dtype))
+        else:
+            k = cache['xk'].astype(adt)
+            v = cache['xv'].astype(adt)
+        scores = _gqa_scores(q, k) / np.sqrt(hd)
+        probs = jax.nn.softmax(scores, axis=-1).astype(adt)
+        out = _gqa_combine(probs, v)
+        return out.reshape(B, S, -1) @ p['wo'].astype(adt), cache
+
+    # self-attention
+    q = rope(q, positions, cfg.rope_theta)
+    k_new = _split_heads(x @ p['wk'].astype(adt), cfg.n_kv_heads, hd)
+    v_new = _split_heads(x @ p['wv'].astype(adt), cfg.n_kv_heads, hd)
+    k_new = rope(k_new, positions, cfg.rope_theta)
+
+    if cache is not None and cache_index is not None:     # decode
+        # Ring-buffer write: slot = index mod cache_len. For full-context
+        # caches cache_len == max_seq so slot == index; for SWA long-context
+        # the cache is only `window` slots and old entries are overwritten.
+        # cache['pos'] tracks the absolute position held in each slot
+        # (init 2**30 ⇒ empty slots always masked: q_pos − 2**30 < 0).
+        cache_len = cache['k'].shape[1]
+        slot = jax.lax.rem(cache_index, cache_len)
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache['k'], k_new.astype(cache['k'].dtype), slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache['v'], v_new.astype(cache['v'].dtype), slot, axis=1)
+        k_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache['pos'], positions.astype(jnp.int32), slot, axis=1)
+        cache = dict(cache, k=k_all, v=v_all, pos=k_pos)
+        mask = _causal_mask(positions, k_pos, cfg.sliding_window)
+        k, v = k_all.astype(adt), v_all.astype(adt)
+    else:
+        if cache is not None:                              # prefill fill
+            # SWA: a window-sized cache only keeps the last `window` prompt
+            # tokens (positions stay absolute; decode's ring masking works
+            # unchanged because slot = position mod cache_len and we place
+            # token at absolute position p into slot p mod cache_len).
+            cache_len = cache['k'].shape[1]
+            if S > cache_len:
+                # ring invariant (slot = pos mod cache_len) requires the
+                # kept block not to wrap: prompt length must be a multiple
+                # of the window (true for all assigned shapes: 32768/4096).
+                assert S % cache_len == 0, (S, cache_len)
+                keep = slice(S - cache_len, None)
+                k_w, v_w = k_new[:, keep], v_new[:, keep]
+                pos_w = positions[:, keep]
+            else:
+                k_w, v_w, pos_w = k_new, v_new, positions
+            k_c = jax.lax.dynamic_update_slice_in_dim(
+                cache['k'], k_w.astype(cache['k'].dtype), 0, axis=1)
+            v_c = jax.lax.dynamic_update_slice_in_dim(
+                cache['v'], v_w.astype(cache['v'].dtype), 0, axis=1)
+            p_c = jax.lax.dynamic_update_slice_in_dim(
+                cache['pos'], pos_w.astype(jnp.int32), 0, axis=1)
+            cache = dict(cache, k=k_c, v=v_c, pos=p_c)
+        mask = _causal_mask(positions, positions, cfg.sliding_window)
+        k, v = k_new, v_new
+
+    # chunked (online-softmax) path: serving *prefill* only — bounds
+    # attention memory at O(S·chunk) instead of O(S²), which is what makes
+    # 32k-token prefills fit HBM. Training keeps dense S×S scores: the
+    # measured HBM traffic of the chunk scan's backward is ~35% WORSE than
+    # dense at S=4096 (EXPERIMENTS.md §Perf iteration 3), and train seqs
+    # are short enough that peak memory is not the binding constraint.
+    if cache is not None and cache_index is None \
+            and cfg.attn_chunk is not None and S > cfg.attn_chunk:
+        out = chunked_attention(q, k, v, positions, positions,
+                                cfg.sliding_window, cfg.attn_chunk, adt)
+        out = lshard(out.reshape(B, S, -1), 'batch', 'seq', 'heads_merged')
+        return out @ p['wo'].astype(adt), cache
+
+    scores = _gqa_scores(q, k) / np.sqrt(hd)
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1).astype(adt)
+    out = _gqa_combine(probs, v)
+    out = lshard(out.reshape(B, S, -1), 'batch', 'seq', 'heads_merged')
+    return out @ p['wo'].astype(adt), cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.n_layers)
+    return {
+        'w_gate': _dense_init(ks[0], (d, f), dt),
+        'w_in': _dense_init(ks[1], (d, f), dt),
+        'w_out': _dense_init(ks[2], (f, d), dt, scale=out_scale),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, adt) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p['w_gate'].astype(adt)) * (x @ p['w_in'].astype(adt))
+    h = lshard(h, 'batch', 'seq', 'ffn')
+    return h @ p['w_out'].astype(adt)
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style dense dispatch; shared + routed experts, top-k)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    out_scale = 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.n_layers)
+
+    def expert_bank(key, n):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            'w_gate': _dense_init(k1, (n, d, f), dt),
+            'w_in': _dense_init(k2, (n, d, f), dt),
+            'w_out': _dense_init(k3, (n, f, d), dt, scale=out_scale),
+        }
+
+    p = {'router': _dense_init(ks[0], (d, e.n_experts), jnp.float32),
+         'experts': expert_bank(ks[1], e.n_experts)}
+    if e.n_shared_experts:
+        p['shared'] = expert_bank(ks[2], e.n_shared_experts)
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → ((B, S, d), aux_loss). GShard dense dispatch with
+    capacity; aux is the Switch-style load-balancing loss E·Σ f_e·p_e.
+
+    dropless=True is the serving path: small token groups (decode: one group
+    of B tokens) get capacity = group size, i.e. *exactly* dropless — decode
+    ≡ prefill ≡ full forward on small batches (tested). Large serving groups
+    (32k-token prefills) use serve_capacity_factor to bound the dispatch
+    tensors; under extreme routing skew a prefill token can drop, the
+    standard GShard/production compromise. Training uses capacity_factor.
+    """
+    e = cfg.moe
+    adt = jnp.dtype(cfg.activation_dtype)
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p['router'])           # (T, E)
+    top_vals, top_idx = jax.lax.top_k(logits, e.top_k)        # (T, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)                 # renorm over k
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_idx, e.n_experts), axis=(0, 1))
+    aux = e.n_experts * jnp.sum(frac * jnp.mean(probs_full, axis=0))
+
+    # GShard-style grouping: tokens are split into G groups of tpg; the
+    # dispatch/combine one-hots are (G, tpg, E, C) — memory O(T·E·C/G·G)
+    # = O(T·E·cap_per_group), bounded regardless of sequence length. Groups
+    # align with the data-parallel batch sharding (G axis ~ 'batch').
+    tpg = min(T, e.serve_group_size if dropless else e.group_size)
+    G = T // tpg
+    assert G * tpg == T, (T, tpg)
+
+    if dropless and tpg <= 256:
+        capacity = tpg                     # exactly dropless (decode)
+    else:
+        cf = e.serve_capacity_factor if dropless else e.capacity_factor
+        capacity = int(np.ceil(tpg * e.top_k / e.n_experts * cf))
+        capacity = max(8, min(capacity, tpg))
+
+    top_idx = top_idx.reshape(G, tpg, e.top_k)
+    gates_g = gates.reshape(G, tpg, e.top_k)
+    xg = xt.reshape(G, tpg, d)
+
+    # position of each (token, slot) within its expert's per-group buffer
+    onehot = jax.nn.one_hot(top_idx, e.n_experts, dtype=jnp.int32)  # (G,t,k,E)
+    flat = onehot.reshape(G, tpg * e.top_k, e.n_experts)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                 # (G,t*k,E)
+    pos = pos.reshape(G, tpg, e.top_k, e.n_experts)
+    in_cap = (pos < capacity) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos, -1), capacity, dtype=adt)
+    dispatch = jnp.einsum('gtke,gtkec->gtec', onehot.astype(adt), pos_oh)
+    combine = jnp.einsum('gtk,gtke,gtkec->gtec', gates_g.astype(adt),
+                         onehot.astype(adt), pos_oh)
+
+    dispatch = lshard(dispatch, 'batch_seq', None, 'expert', None)
+    expert_in = jnp.einsum('gtec,gtd->gecd', dispatch, xg)    # (G, E, C, d)
+    expert_in = lshard(expert_in, 'batch_seq', 'expert', None, 'expert_embed')
+
+    w = p['experts']
+    h = jax.nn.silu(jnp.einsum('gecd,edf->gecf', expert_in,
+                               w['w_gate'].astype(adt))) \
+        * jnp.einsum('gecd,edf->gecf', expert_in, w['w_in'].astype(adt))
+    h = lshard(h, 'batch_seq', 'expert', None, 'expert_ffn')
+    expert_out = jnp.einsum('gecf,efd->gecd', h, w['w_out'].astype(adt))
+    expert_out = lshard(expert_out, 'batch_seq', 'expert', None, 'expert_embed')
+
+    out = jnp.einsum('gtec,gecd->gtd', combine, expert_out)   # (G, t, d)
+    out = out.reshape(T, d)
+
+    if 'shared' in p:
+        sw = p['shared']
+        hs = jax.nn.silu(jnp.einsum('td,ndf->ntf', xt, sw['w_gate'].astype(adt))) \
+            * jnp.einsum('td,ndf->ntf', xt, sw['w_in'].astype(adt))
+        out = out + jnp.einsum('ntf,nfd->td', hs, sw['w_out'].astype(adt))
+
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,300 @@
+"""Decoder-only LM assembly over heterogeneous block patterns.
+
+The layer stack is ``cfg.block_pattern`` repeated ``cfg.n_repeats`` times.
+Per-pattern-position parameters are *stacked* over repeats and the stack is
+traversed with jax.lax.scan — one pattern repetition is compiled once,
+keeping HLO size and compile time O(pattern) instead of O(n_layers). The
+scan body is rematerialized (jax.checkpoint) for training.
+
+'shared' blocks (Zamba2-style) hold ONE parameter copy outside the scan
+(closure capture) but per-occurrence KV caches inside the scanned state.
+
+Modality frontends ([vlm]/[audio]) are stubs per the assignment: 'cross'
+blocks consume precomputed patch/frame embeddings handed in as
+``modality_embeds`` (see launch.specs.input_specs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, mamba2
+from repro.models.config import ModelConfig
+from repro.sharding_rules import lshard
+
+Params = Dict[str, Any]
+
+ATTN_KINDS = ('dense', 'moe', 'cross', 'shared')
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    norm = lambda: jnp.ones((d,), dt)
+    if kind in ('dense', 'shared'):
+        return {'attn_norm': norm(), 'attn': layers.init_attention(ks[0], cfg),
+                'mlp_norm': norm(), 'mlp': layers.init_mlp(ks[1], cfg)}
+    if kind == 'moe':
+        return {'attn_norm': norm(), 'attn': layers.init_attention(ks[0], cfg),
+                'mlp_norm': norm(), 'moe': layers.init_moe(ks[1], cfg)}
+    if kind == 'cross':
+        return {'attn_norm': norm(), 'attn': layers.init_attention(ks[0], cfg),
+                'xattn_norm': norm(),
+                'xattn': layers.init_attention(ks[1], cfg, cross=True),
+                'mlp_norm': norm(), 'mlp': layers.init_mlp(ks[2], cfg)}
+    if kind == 'mamba2':
+        return {'norm': norm(), 'mamba': mamba2.init_mamba2(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_head, k_blocks, k_shared = jax.random.split(key, 4)
+    vp = cfg.padded_vocab
+    params: Params = {
+        'embed': (jax.random.normal(k_emb, (vp, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        'final_norm': jnp.ones((cfg.d_model,), dt),
+        'blocks': {},
+    }
+    if not cfg.tie_embeddings:
+        params['lm_head'] = (jax.random.normal(
+            k_head, (vp, cfg.d_model), jnp.float32)
+            / np.sqrt(cfg.d_model)).astype(dt)
+    for pos, kind in enumerate(cfg.block_pattern):
+        if kind == 'shared':
+            continue
+        keys = jax.random.split(jax.random.fold_in(k_blocks, pos),
+                                cfg.n_repeats)
+        params['blocks'][f'p{pos}'] = jax.vmap(
+            lambda k: _init_block(k, kind, cfg))(keys)
+    if 'shared' in cfg.block_pattern:
+        params['shared_block'] = _init_block(k_shared, 'shared', cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Stacked-over-repeats cache per pattern position."""
+    R, hd = cfg.n_repeats, cfg.head_dim
+    caches: Params = {}
+    s_att = attn_cache_len(cfg, max_len)
+    for pos, kind in enumerate(cfg.block_pattern):
+        if kind in ATTN_KINDS:
+            c = {'k': jnp.zeros((R, batch, s_att, cfg.n_kv_heads, hd), dtype),
+                 'v': jnp.zeros((R, batch, s_att, cfg.n_kv_heads, hd), dtype),
+                 'pos': jnp.full((R, batch, s_att), 2**30, jnp.int32)}
+            if kind == 'cross':
+                c['xk'] = jnp.zeros((R, batch, cfg.n_modality_tokens,
+                                     cfg.n_kv_heads, hd), dtype)
+                c['xv'] = jnp.zeros_like(c['xk'])
+            caches[f'p{pos}'] = c
+        elif kind == 'mamba2':
+            one = mamba2.init_mamba2_cache(cfg, batch, dtype)
+            caches[f'p{pos}'] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), one)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, bp: Params, x, cfg: ModelConfig, *, positions,
+                 cache, cache_index, modality_embeds, decode):
+    """Returns (x, cache, aux_loss).
+
+    Sequence parallelism (Megatron-SP): the residual stream x and the
+    norms live seq-sharded over the 'model' axis ('seq_sp' logical axis —
+    mapped to None outside SP contexts, e.g. decode). Each sub-module
+    (attention / mamba / mlp / moe) is bracketed by an all-gather on entry
+    ('seq' = replicated) and a reduce-scatter on exit ('seq_sp') — GSPMD
+    converts the row-parallel psum into a reduce-scatter automatically.
+    This cuts the norm/residual HBM traffic by the model-axis degree, which
+    profiling shows dominates the train memory term (EXPERIMENTS.md §Perf).
+    """
+    eps = cfg.norm_eps
+    adt = jnp.dtype(cfg.activation_dtype)
+    zero = jnp.zeros((), jnp.float32)
+
+    def sp_enter(h):   # norm output → full seq for the mixer
+        return lshard(h, 'batch', 'seq', 'embed')
+
+    def sp_exit(h):    # mixer output → seq-sharded residual region
+        return lshard(h, 'batch', 'seq_sp', 'embed')
+
+    if kind == 'mamba2':
+        h_in = sp_enter(layers.rmsnorm(x, bp['norm'], eps))
+        h, cache = mamba2.mamba2_apply(bp['mamba'], h_in, cfg,
+                                       cache=cache, decode=decode)
+        return x + sp_exit(h), cache, zero
+    # attention-bearing kinds
+    self_cache = None
+    if cache is not None:
+        self_cache = {k: v for k, v in cache.items() if k in ('k', 'v', 'pos')}
+    h, self_cache = layers.attention_apply(
+        bp['attn'], sp_enter(layers.rmsnorm(x, bp['attn_norm'], eps)), cfg,
+        positions=positions, cache=self_cache, cache_index=cache_index)
+    if cache is not None:
+        cache = dict(cache, **self_cache)
+    x = x + sp_exit(h)
+    if kind == 'cross':
+        xk_src = modality_embeds if not decode else None
+        xcache = None
+        if cache is not None:
+            xcache = {'xk': cache['xk'], 'xv': cache['xv']}
+        h, xcache = layers.attention_apply(
+            bp['xattn'], sp_enter(layers.rmsnorm(x, bp['xattn_norm'], eps)),
+            cfg, positions=positions, cache=xcache, kv_src=xk_src)
+        if cache is not None:
+            cache = dict(cache, **xcache)
+        x = x + sp_exit(h)
+    hin = sp_enter(layers.rmsnorm(x, bp['mlp_norm'], eps))
+    aux = zero
+    if kind == 'moe':
+        serving = cache is not None  # prefill/decode must be dropless
+        h, aux = layers.moe_apply(bp['moe'], hin, cfg, dropless=serving)
+    else:
+        h = layers.mlp_apply(bp['mlp'], hin, adt)
+    return x + sp_exit(h), cache, aux
+
+
+def _split_attn_cache(kind: str, cache):
+    """Cross blocks carry both self ('k','v','pos') and cross ('xk','xv')
+    sub-caches in one dict; attention_apply distinguishes by keys present."""
+    del kind
+    return cache
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            positions: Optional[jnp.ndarray] = None,
+            caches: Optional[Params] = None,
+            cache_index: Optional[jnp.ndarray] = None,
+            modality_embeds: Optional[jnp.ndarray] = None,
+            decode: bool = False,
+            remat: bool = True,
+            remat_policy: Optional[Any] = None,
+            ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """tokens (B, S) int32 → logits (B, S, V); optionally updated caches."""
+    B, S = tokens.shape
+    adt = jnp.dtype(cfg.activation_dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    x = jnp.take(params['embed'], tokens, axis=0).astype(adt)
+    x = lshard(x, 'batch', 'seq_sp', 'embed')
+    if modality_embeds is not None:
+        modality_embeds = modality_embeds.astype(adt)
+
+    shared_bp = params.get('shared_block')
+
+    def body(carry, xs):
+        x, aux = carry
+        blocks_slice, cache_slice = xs
+        new_cache_slice = {}
+        for pos, kind in enumerate(cfg.block_pattern):
+            key = f'p{pos}'
+            bp = shared_bp if kind == 'shared' else blocks_slice[key]
+            c = cache_slice.get(key) if cache_slice is not None else None
+            x, c, aux_b = _apply_block(kind, bp, x, cfg, positions=positions,
+                                       cache=c, cache_index=cache_index,
+                                       modality_embeds=modality_embeds,
+                                       decode=decode)
+            aux = aux + aux_b
+            if c is not None:
+                new_cache_slice[key] = c
+            x = lshard(x, 'batch', 'seq_sp', 'embed')
+        return (x, aux), new_cache_slice
+
+    body_fn = jax.checkpoint(body, policy=remat_policy) if remat else body
+
+    xs = (params['blocks'], caches if caches is not None else {})
+    (x, aux_total), new_caches = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+
+    x = lshard(x, 'batch', 'seq', 'embed')   # gather out of the SP region
+    x = layers.rmsnorm(x, params['final_norm'], cfg.norm_eps)
+    head = params.get('lm_head', params['embed'])
+    logits = jnp.einsum('bsd,vd->bsv', x, head.astype(adt),
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:   # mask padded vocab rows
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    logits = lshard(logits, 'batch', 'seq', 'vocab')
+    return logits, (new_caches if caches is not None else None), aux_total
+
+
+def lm_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            *, remat: bool = True, remat_policy: Optional[Any] = None,
+            aux_loss_weight: float = 0.0,
+            modality_embeds: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy. batch: tokens (B,S), targets (B,S),
+    mask (B,S) float (1 = real token). MoE aux (load-balance) loss is
+    accumulated through the layer scan and added with ``aux_loss_weight``."""
+    if modality_embeds is None:
+        modality_embeds = batch.get('modality_embeds')
+    logits, _, aux = forward(params, batch['tokens'], cfg, remat=remat,
+                             remat_policy=remat_policy,
+                             modality_embeds=modality_embeds)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch['targets'][..., None],
+                              axis=-1)[..., 0]
+    nll = logz - tgt
+    mask = batch['mask'].astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {'loss': loss, 'tokens': jnp.sum(mask)}
+    metrics['accuracy'] = jnp.sum(
+        (jnp.argmax(logits, -1) == batch['targets']) * mask) / denom
+    if aux_loss_weight and cfg.moe is not None:
+        metrics['aux_loss'] = aux
+        loss = loss + aux_loss_weight * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            caches: Params, *, modality_embeds=None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Fill caches with a full prompt; returns (last-token logits, caches)."""
+    logits, caches, _ = forward(params, tokens, cfg, caches=caches,
+                                modality_embeds=modality_embeds, remat=False)
+    return logits[:, -1], caches
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                caches: Params, cache_index: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. tokens (B,1); cache_index: scalar int32 (current
+    absolute position). Returns (logits (B,V), updated caches)."""
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1)).astype(jnp.int32)
+    logits, caches, _ = forward(params, tokens, cfg, positions=positions,
+                                caches=caches, cache_index=cache_index,
+                                decode=True, remat=False)
+    return logits[:, 0], caches

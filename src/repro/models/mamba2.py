@@ -1,0 +1,222 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm
+(Dao & Gu, arXiv:2405.21060). Attention-free; O(L) in sequence length.
+
+Layout (single B/C group, per-head scalar A — the Mamba-2 parameterization):
+
+  in_proj:  d → [z: d_in | xBC: d_in + 2N | dt: H]    d_in = expand·d, H = d_in/P
+  conv1d:   causal depthwise (width d_conv) over xBC, SiLU
+  SSD:      h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t ;  y_t = C_t h_t + D x_t
+  gate:     y = RMSNorm(y · silu(z)) @ out_proj
+
+The chunked scan splits L into chunks of Q: an intra-chunk quadratic term
+(the "attention dual", runs on the MXU) plus a *linear* lax.scan over chunk
+states (b, H, P, N) — unlike the paper's minimal reference which uses an
+O(C²) segsum across chunks; the linear scan is what makes long_500k viable.
+
+Decode carries (conv_state (B, d_conv-1, d_in+2N), ssd_state (B, H, P, N)) —
+constant memory in context length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.sharding_rules import lshard
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    conv_ch = d_in + 2 * N
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # dt_bias init: softplus^-1 of dt ~ U[1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[2], (H,), jnp.float32,
+                           np.log(1e-3), np.log(1e-1))
+    dt0 = jnp.exp(u)
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    # The input projection is stored as THREE matrices (z | xBC | dt) rather
+    # than one fused (d, 2·d_in+2N+H): under TP each output then shards
+    # independently on the model axis, whereas the fused layout puts the
+    # z/xBC/dt split boundaries mid-shard and SPMD inserts per-layer
+    # collective-permutes + realignment copies (measured on mamba2 train_4k;
+    # EXPERIMENTS.md §Perf iteration M1). Same flops — XLA fuses the 3 dots.
+    return {
+        'in_proj_z': (jax.random.normal(ks[0], (d, d_in), jnp.float32)
+                      / np.sqrt(d)).astype(dt),
+        'in_proj_xbc': (jax.random.normal(ks[4], (d, d_in + 2 * N),
+                                          jnp.float32) / np.sqrt(d)).astype(dt),
+        'in_proj_dt': (jax.random.normal(ks[5], (d, H), jnp.float32)
+                       / np.sqrt(d)).astype(dt),
+        'conv_w': (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   / np.sqrt(s.d_conv)).astype(dt),
+        'conv_b': jnp.zeros((conv_ch,), dt),
+        'A_log': jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        'D': jnp.ones((H,), jnp.float32),
+        'dt_bias': dt_bias,
+        'norm_w': jnp.ones((d_in,), dt),
+        'out_proj': (jax.random.normal(ks[3], (d_in, d), jnp.float32)
+                     / np.sqrt(d_in) / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. xBC (B,L,C), w (K,C). Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    xpad = jnp.concatenate([state, xBC], axis=1)
+    out = sum(xpad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xpad[:, -(K - 1):, :] if K > 1 else state
+    return out + b[None, None, :], new_state
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) log-decays → (..., Q, Q) with out[i,j] = Σ_{j<k<=i} a[k],
+    -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # Σ_{k<=i} − Σ_{k<=j}
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence.
+
+    x (B,L,H,P), dt (B,L,H) post-softplus, A (H,) negative,
+    Bm/Cm (B,L,N) single group. Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    C = L // Q
+
+    a = (dt * A[None, None, :]).astype(jnp.float32)        # (B,L,H) log-decay
+    xdt = x * dt[..., None].astype(x.dtype)                # dt-weighted input
+
+    # chunked views
+    ac = a.reshape(Bsz, C, Q, H)
+    xc = xdt.reshape(Bsz, C, Q, H, P)
+    Bc = Bm.reshape(Bsz, C, Q, N)
+    Cc = Cm.reshape(Bsz, C, Q, N)
+
+    # --- intra-chunk (quadratic dual; MXU-friendly einsums) ---
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))      # (B,C,H,Q,Q)
+    scores = jnp.einsum('bcin,bcjn->bcij', Cc, Bc)         # (B,C,Q,Q)
+    y_intra = jnp.einsum('bcij,bchij,bcjhp->bcihp',
+                         scores.astype(jnp.float32), Lmat,
+                         xc.astype(jnp.float32))
+
+    # --- chunk states: S_c = Σ_j exp(a_sum - a_cs_j) B_j ⊗ x_j ---
+    a_cs = jnp.cumsum(ac, axis=2)                          # (B,C,Q,H)
+    a_tot = a_cs[:, :, -1:, :]                             # (B,C,1,H)
+    decay_to_end = jnp.exp(a_tot - a_cs)                   # (B,C,Q,H)
+    S = jnp.einsum('bcjn,bcjh,bcjhp->bchpn',
+                   Bc.astype(jnp.float32), decay_to_end,
+                   xc.astype(jnp.float32))                 # (B,C,H,P,N)
+
+    # --- inter-chunk linear recurrence over C (lax.scan) ---
+    a_chunk = jnp.exp(a_tot[:, :, 0, :])                   # (B,C,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        decay, s_c = inp                                   # (B,H), (B,H,P,N)
+        h_new = h * decay[..., None, None] + s_c
+        return h_new, h                                    # emit state *before* chunk
+
+    (final_state, h_prevs) = jax.lax.scan(
+        step, init_state,
+        (a_chunk.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,C,H,P,N)
+
+    # --- inter-chunk output: C_i · exp(a_cs_i) · h_prev ---
+    decay_in = jnp.exp(a_cs)                               # (B,C,Q,H)
+    y_inter = jnp.einsum('bcin,bcih,bchpn->bcihp',
+                         Cc.astype(jnp.float32), decay_in, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, final_state
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                 cache: Optional[Params] = None,
+                 decode: bool = False) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Full block. cache = {'conv': (B,K-1,C), 'ssd': (B,H,P,N)} for decode /
+    carried prefill. decode=True means x is (B,1,d) single-token."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    H, P, N = s.n_heads(d), s.head_dim, s.d_state
+    adt = jnp.dtype(cfg.activation_dtype)
+
+    z = x @ p['in_proj_z'].astype(adt)
+    xBC = x @ p['in_proj_xbc'].astype(adt)
+    dt_raw = x @ p['in_proj_dt'].astype(adt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p['dt_bias'][None, None, :])
+    A = -jnp.exp(p['A_log'])
+
+    conv_state = cache['conv'] if cache is not None else None
+    if decode:
+        xBC_conv, new_conv = _causal_conv(xBC, p['conv_w'].astype(adt),
+                                          p['conv_b'].astype(adt), conv_state)
+    else:
+        xBC_conv, new_conv = _causal_conv(xBC, p['conv_w'].astype(adt),
+                                          p['conv_b'].astype(adt), None)
+    xBC_conv = jax.nn.silu(xBC_conv)
+    xs, Bm, Cm = jnp.split(xBC_conv, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(xs.shape[0], xs.shape[1], H, P)
+    xh = lshard(xh, 'batch', 'seq', 'heads', None)
+
+    if decode:
+        # single-step recurrence
+        h0 = cache['ssd']
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])             # (B,H)
+        dBx = jnp.einsum('bn,bhp,bh->bhpn', Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt[:, 0])
+        h1 = h0 * dA[..., None, None] + dBx
+        y = jnp.einsum('bn,bhpn->bhp', Cm[:, 0].astype(jnp.float32), h1)
+        y = y[:, None]                                     # (B,1,H,P)
+        new_cache = {'conv': new_conv, 'ssd': h1}
+    else:
+        init = cache['ssd'] if cache is not None else None
+        y, hT = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, init)
+        new_cache = {'conv': new_conv, 'ssd': hT} if cache is not None else None
+
+    y = y + p['D'][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(y.shape[0], y.shape[1], d_in).astype(adt)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm (mamba2 places the norm pre-out_proj)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)).astype(adt) \
+        * p['norm_w'].astype(adt)
+    return y @ p['out_proj'].astype(adt), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H, P, N = s.n_heads(cfg.d_model), s.head_dim, s.d_state
+    return {
+        'conv': jnp.zeros((batch, s.d_conv - 1, d_in + 2 * N), dtype),
+        'ssd': jnp.zeros((batch, H, P, N), jnp.float32),
+    }

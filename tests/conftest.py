@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see 1 device (the dry-run sets its own 512-device flag in-process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))

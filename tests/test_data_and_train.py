@@ -1,0 +1,85 @@
+"""Data pipeline determinism + trainer invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_optimizer
+from repro.core.base import OptimizerSpec
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train import trainer
+
+
+def test_data_determinism_and_shapes():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=3,
+                     n_shards=2)
+    ds = SyntheticLM(cfg)
+    a = ds.batch_at(7, shard=0)
+    b = ds.batch_at(7, shard=0)
+    np.testing.assert_array_equal(a['tokens'], b['tokens'])
+    assert a['tokens'].shape == (4, 32)
+    assert (a['targets'][:, :-1] == a['tokens'][:, 1:]).all()
+    # different steps / shards differ
+    assert not (ds.batch_at(8, 0)['tokens'] == a['tokens']).all()
+    assert not (ds.batch_at(7, 1)['tokens'] == a['tokens']).all()
+    assert a['tokens'].max() < 1000 and a['tokens'].min() >= 0
+
+
+def test_data_has_learnable_structure():
+    """Markov structure: successor entropy must be far below unigram."""
+    ds = SyntheticLM(DataConfig(vocab=64, seq_len=512, global_batch=8,
+                                branch=2, noise=0.1))
+    b = ds.batch_at(0)
+    toks, tgts = b['tokens'].reshape(-1), b['targets'].reshape(-1)
+    # empirical P(correct successor) ≈ (1-noise); check hit rate of the
+    # two hashed successors
+    succ = ds._successors(toks)
+    hits = (succ == tgts[:, None]).any(axis=1).mean()
+    assert hits > 0.7, hits
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """k microbatches must produce (numerically) the same update as one."""
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced(n_repeats=1, d_model=32, d_ff=64, vocab=128, seq=16)
+    opt = make_optimizer(OptimizerSpec(name='sgd', learning_rate=0.1,
+                                       beta1=0.0))
+    state = trainer.init_state(jax.random.PRNGKey(0), r, opt)
+    ds = SyntheticLM(DataConfig(vocab=r.vocab, seq_len=16, global_batch=8))
+    batch = ds.global_batch_at(0)
+
+    s1 = jax.jit(trainer.make_train_step(r, opt, microbatches=1))(
+        state, batch)[0]
+    s2 = jax.jit(trainer.make_train_step(r, opt, microbatches=4))(
+        state, batch)[0]
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_sm3_trains_loss_down():
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced(n_repeats=2, seq=32)
+    opt = make_optimizer(OptimizerSpec(
+        name='sm3', learning_rate=0.3, extra={'warmup_steps': 5}))
+    ds = SyntheticLM(DataConfig(vocab=r.vocab, seq_len=32, global_batch=8))
+    _, hist = trainer.train_loop(r, opt, ds, steps=25, log_every=5)
+    assert hist[-1]['loss'] < hist[0]['loss'] - 0.3
+
+
+def test_grad_compression_error_feedback():
+    """int8 EF quantization: the carried residual keeps the *cumulative*
+    compressed sum close to the true sum (error feedback telescopes)."""
+    from repro.core import compression
+    key = jax.random.PRNGKey(0)
+    g_true_sum = np.zeros(64, np.float32)
+    g_comp_sum = np.zeros(64, np.float32)
+    ef = compression.ef_init({'w': jnp.zeros(64)})
+    for t in range(20):
+        g = jax.random.normal(jax.random.fold_in(key, t), (64,))
+        g_true_sum += np.asarray(g)
+        q, s, ef = compression.compress_grads({'w': g}, ef)
+        g_comp_sum += np.asarray(compression.dequantize_int8(q['w'], s['w']))
+    # per-step error can be ~amax/127; cumulative must stay bounded (not grow)
+    err = np.abs(g_comp_sum - g_true_sum).max()
+    assert err < 0.15, err

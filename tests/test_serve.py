@@ -1,0 +1,93 @@
+"""Serving: decode ≡ prefill ≡ full forward per family; SWA ring buffer;
+engine behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+FAMILIES = ['stablelm-1.6b', 'h2o-danube-1.8b', 'mamba2-2.7b', 'zamba2-2.7b',
+            'mixtral-8x22b', 'llama-3.2-vision-11b', 'musicgen-medium']
+
+
+@pytest.mark.parametrize('arch', FAMILIES)
+def test_decode_matches_prefill(arch):
+    cfg, _ = get_config(arch)
+    r = cfg.reduced()
+    p = lm.init_params(jax.random.PRNGKey(0), r)
+    B, S = 2, 16
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, r.vocab)
+    me = (jax.random.normal(key, (B, r.n_modality_tokens, r.d_model)) * 0.02
+          if r.family == 'vlm' else None)
+    caches0 = lm.init_cache(r, B, S, jnp.float32)
+    full_logits, _, _ = lm.forward(p, toks, r, caches=caches0,
+                                   modality_embeds=me, remat=False)
+    caches = lm.init_cache(r, B, S, jnp.float32)
+    _, caches = lm.prefill(p, toks[:, :S // 2], r, caches,
+                           modality_embeds=me)
+    errs = []
+    for t in range(S // 2, S):
+        lt, caches = lm.decode_step(p, toks[:, t:t + 1], r, caches,
+                                    jnp.asarray(t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lt - full_logits[:, t]))))
+    assert max(errs) < 2e-3, (arch, max(errs))
+
+
+def test_swa_ring_buffer_long_decode():
+    """Decode far past the window with a window-sized ring cache must match
+    a full-cache decode (same SWA mask)."""
+    cfg, _ = get_config('h2o-danube-1.8b')
+    r = cfg.reduced(seq=64)            # sliding_window = 32
+    W = r.sliding_window
+    p = lm.init_params(jax.random.PRNGKey(0), r)
+    B, S = 1, 64
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, r.vocab)
+
+    # reference: full-length cache (no ring wrap)
+    cf = lm.init_cache(r, B, max_len=10_000, dtype=jnp.float32)
+    assert cf['p0']['k'].shape[2] == W  # cache is already window-bounded
+    # therefore: compare ring cache (W slots) against brute-force forward
+    caches0 = lm.init_cache(r, B, S, jnp.float32)   # also W slots
+    logits_full, _, _ = lm.forward(p, toks, r, remat=False)
+
+    caches = lm.init_cache(r, B, S, jnp.float32)
+    _, caches = lm.prefill(p, toks[:, :W], r, caches)
+    errs = []
+    for t in range(W, S):              # every step past W wraps the ring
+        lt, caches = lm.decode_step(p, toks[:, t:t + 1], r, caches,
+                                    jnp.asarray(t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lt - logits_full[:, t]))))
+    assert max(errs) < 2e-3, max(errs)
+
+
+def test_engine_greedy_deterministic():
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced(n_repeats=1, d_model=32, d_ff=64, vocab=128, seq=32)
+    p = lm.init_params(jax.random.PRNGKey(0), r)
+    eng = ServeEngine(r, p, batch_slots=2, max_len=64)
+    reqs = [Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=8),
+            Request(prompt=np.arange(3, dtype=np.int32), max_new_tokens=4)]
+    out1 = [list(r_.output) for r_ in eng.generate(reqs)]
+    reqs2 = [Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=8),
+             Request(prompt=np.arange(3, dtype=np.int32), max_new_tokens=4)]
+    out2 = [list(r_.output) for r_ in eng.generate(reqs2)]
+    assert out1 == out2
+    assert len(out1[0]) == 8 and len(out1[1]) == 4
+    assert all(0 <= t < r.vocab for o in out1 for t in o)
+
+
+def test_engine_multiwave():
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced(n_repeats=1, d_model=32, d_ff=64, vocab=128, seq=32)
+    p = lm.init_params(jax.random.PRNGKey(0), r)
+    eng = ServeEngine(r, p, batch_slots=2, max_len=32)
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=3)
+            for _ in range(5)]          # 3 waves over 2 slots
+    outs = eng.generate(reqs)
+    assert all(len(r_.output) == 3 for r_ in outs)
+    # identical prompts → identical greedy outputs across waves
+    assert len({tuple(r_.output) for r_ in outs}) == 1

@@ -1,0 +1,171 @@
+"""Sharding-rule unit tests + an end-to-end 8-device pjit train step run in
+a subprocess (device count must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import make_optimizer
+from repro.core.base import OptimizerSpec
+from repro.launch import sharding as shr
+from repro.models import lm
+from repro.train import trainer
+
+
+def _pspecs(arch='stablelm-1.6b', expert_shard='tp'):
+    cfg, _ = get_config(arch)
+    r = cfg.reduced()
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), r))
+    return r, shapes, shr.param_specs(shapes, expert_shard)
+
+
+def test_param_specs_dense():
+    r, shapes, specs = _pspecs()
+    assert specs['embed'] == P('model', 'data')
+    assert specs['blocks']['p0']['attn']['wq'] == P(None, 'data', 'model')
+    assert specs['blocks']['p0']['attn']['wo'] == P(None, 'model', 'data')
+    assert specs['blocks']['p0']['mlp']['w_out'] == P(None, 'model', 'data')
+    assert specs['blocks']['p0']['attn_norm'] == P(None, None)
+
+
+def test_param_specs_moe_ep_vs_tp():
+    _, _, specs_ep = _pspecs('deepseek-moe-16b', 'ep')
+    e = specs_ep['blocks']['p0']['moe']['experts']
+    assert e['w_gate'] == P(None, 'model', 'data', None)
+    assert e['w_out'] == P(None, 'model', None, 'data')
+    # shared experts: pure TP with d REPLICATED (never put a mesh axis on a
+    # contraction dim — EXPERIMENTS.md §Perf D2)
+    s = specs_ep['blocks']['p0']['moe']['shared']
+    assert s['w_gate'] == P(None, None, None, 'model')
+    assert s['w_out'] == P(None, None, 'model', None)
+
+    _, _, specs_tp = _pspecs('mixtral-8x22b', 'tp')
+    e = specs_tp['blocks']['p0']['moe']['experts']
+    assert e['w_gate'] == P(None, None, 'data', 'model')
+    assert e['w_out'] == P(None, None, 'model', 'data')
+
+
+def test_param_specs_mamba_and_shared():
+    _, _, specs = _pspecs('zamba2-2.7b')
+    m = specs['blocks']['p0']['mamba']
+    # in_proj is split into 3 independently sharded matrices (§Perf M1)
+    assert m['in_proj_z'] == P(None, 'data', 'model')
+    assert m['in_proj_xbc'] == P(None, 'data', 'model')
+    assert m['in_proj_dt'] == P(None, 'data', 'model')
+    assert m['out_proj'] == P(None, 'model', 'data')
+    assert m['conv_w'] == P(None, None, 'model')
+    assert m['A_log'] == P(None, None)
+    # shared block: unstacked 2-D specs
+    sb = specs['shared_block']
+    assert sb['attn']['wq'] == P('data', 'model')
+
+
+def test_sm3_state_specs_follow_covers():
+    """SM3 accumulators inherit exactly the spec entry of their kept axis."""
+    r, shapes, pspecs = _pspecs()
+    opt = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.1))
+    state_shape = jax.eval_shape(
+        lambda: trainer.init_state(jax.random.PRNGKey(0), r, opt))
+    sspecs = shr.train_state_specs(state_shape, pspecs)
+    # find the SM3State in the chained opt state
+    sm3_state = state_shape.opt_state[0]
+    sm3_specs = sspecs.opt_state[0]
+    wq_mu = sm3_specs.mu['blocks']['p0']['attn']['wq']
+    # param spec (None,'data','model') → acc keeping axis1 = (None,'data',None)
+    assert wq_mu[0] == P(None, None, None)
+    assert wq_mu[1] == P(None, 'data', None)
+    assert wq_mu[2] == P(None, None, 'model')
+    emb_mu = sm3_specs.mu['embed']
+    assert emb_mu[0] == P('model', None)
+    assert emb_mu[1] == P(None, 'data')
+    # momentum mirrors params
+    assert sspecs.opt_state[1].momentum['embed'] == P('model', 'data')
+
+
+def test_cache_specs_modes():
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced()
+    cache_shape = jax.eval_shape(
+        lambda: lm.init_cache(r, 8, 64, jnp.bfloat16))
+    ch = shr.cache_specs(cache_shape, kv_shard='heads', multi_pod=False)
+    assert ch['p0']['k'] == P(None, 'data', None, 'model', None)
+    cs = shr.cache_specs(cache_shape, kv_shard='seq', multi_pod=True)
+    assert cs['p0']['k'] == P(None, ('pod', 'data'), 'model', None, None)
+    c1 = shr.cache_specs(cache_shape, kv_shard='seq', multi_pod=False,
+                         batch_shardable=False)
+    assert c1['p0']['k'] == P(None, None, 'model', None, None)
+
+
+_SUBPROCESS_PROG = textwrap.dedent('''
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    sys.path.insert(0, "src")
+    from repro.configs import get_config
+    from repro.core import make_optimizer
+    from repro.core.base import OptimizerSpec
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch import sharding as shr
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import lm
+    from repro.sharding_rules import logical_axis_rules
+    from repro.train import trainer
+
+    cfg, _ = get_config("stablelm-1.6b")
+    r = cfg.reduced(n_repeats=2, d_model=64, d_ff=128, vocab=256, seq=32)
+    opt = make_optimizer(OptimizerSpec(name="sm3", learning_rate=0.2,
+                                       extra={"warmup_steps": 2}))
+    mesh = make_host_mesh(data=4, model=2)
+    state = trainer.init_state(jax.random.PRNGKey(0), r, opt)
+    pspecs = shr.param_specs(jax.eval_shape(lambda: state.params))
+    sspecs = shr.train_state_specs(jax.eval_shape(lambda: state), pspecs)
+    bspecs = shr.batch_specs(multi_pod=False)
+    rules = shr.activation_rules(multi_pod=False)
+    ds = SyntheticLM(DataConfig(vocab=r.vocab, seq_len=32, global_batch=8))
+
+    with mesh, logical_axis_rules(rules):
+        state = jax.device_put(state, shr.as_shardings(sspecs, mesh))
+        step = jax.jit(trainer.make_train_step(r, opt, microbatches=2),
+                       in_shardings=shr.as_shardings((sspecs, bspecs), mesh),
+                       donate_argnums=0)
+        losses = []
+        for t in range(8):
+            state, metrics = step(state, ds.global_batch_at(t))
+            losses.append(float(metrics["loss"]))
+
+    # compare against single-device reference
+    state1 = trainer.init_state(jax.random.PRNGKey(0), r, opt)
+    step1 = jax.jit(trainer.make_train_step(r, opt, microbatches=2))
+    losses1 = []
+    for t in range(8):
+        state1, m1 = step1(state1, ds.global_batch_at(t))
+        losses1.append(float(m1["loss"]))
+    print(json.dumps({"sharded": losses, "single": losses1}))
+''')
+
+
+@pytest.mark.slow
+def test_pjit_train_step_matches_single_device():
+    """8 fake devices, (4,2) mesh: sharded SM3 training ≡ unsharded."""
+    env = dict(os.environ)
+    env.pop('XLA_FLAGS', None)
+    out = subprocess.run([sys.executable, '-c', _SUBPROCESS_PROG],
+                         capture_output=True, text=True, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))),
+                         env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    import numpy as np
+    np.testing.assert_allclose(data['sharded'], data['single'],
+                               rtol=2e-4, atol=2e-4)
+    assert data['sharded'][-1] < data['sharded'][0]  # it learns

@@ -1,0 +1,147 @@
+"""Property tests for the paper's theoretical claims (Claim 2, Prop. 3) and
+algebraic identities of SM3-I/II."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import scale_by_adagrad
+from repro.core.covers import GeneralCover, codim1_cover_shapes, cover_memory_ratio
+from repro.core.sm3 import (scale_by_sm3, sm3_i_reference_step,
+                            sm3_ii_reference_step)
+
+# deterministic gradient streams for hypothesis
+def _grad_stream(seed, steps, shape):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(jax.random.fold_in(key, t), shape)
+            for t in range(steps)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 6), n=st.integers(1, 6),
+       steps=st.integers(1, 6))
+def test_claim2_and_prop3_sandwich(seed, m, n, steps):
+    """γ_t(i) ≤ ν'_t(i) ≤ ν_t(i), and both ν sequences are monotone."""
+    cover = GeneralCover.rows_and_cols(m, n)
+    d = m * n
+    mu_i = jnp.zeros(cover.k)
+    mu_ii = jnp.zeros(cover.k)
+    w = jnp.zeros(d)
+    gamma = jnp.zeros(d)
+    prev_nu_i = jnp.zeros(d)
+    prev_nu_ii = jnp.zeros(d)
+    for g in _grad_stream(seed, steps, (d,)):
+        gamma = gamma + g ** 2
+        _, mu_i, nu_i = sm3_i_reference_step(w, g, mu_i, cover, 0.1)
+        _, mu_ii, nu_ii = sm3_ii_reference_step(w, g, mu_ii, cover, 0.1)
+        nu_i, nu_ii = np.asarray(nu_i), np.asarray(nu_ii)
+        # Claim 2 + Prop 3: γ ≤ ν' ≤ ν
+        assert (np.asarray(gamma) <= nu_ii + 1e-5).all()
+        assert (nu_ii <= nu_i + 1e-5).all()
+        # monotonicity
+        assert (np.asarray(prev_nu_i) <= nu_i + 1e-6).all()
+        assert (np.asarray(prev_nu_ii) <= nu_ii + 1e-6).all()
+        prev_nu_i, prev_nu_ii = nu_i, nu_ii
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), d=st.integers(1, 12),
+       steps=st.integers(1, 5))
+def test_singleton_cover_is_adagrad(seed, d, steps):
+    """Paper §3: with S_i = {i}, SM3-I ≡ Adagrad exactly."""
+    tx = scale_by_sm3('I')
+    ta = scale_by_adagrad()
+    p = {'w': jnp.zeros(d)}
+    s1, s2 = tx.init(p), ta.init(p)
+    for g in _grad_stream(seed, steps, (d,)):
+        u1, s1 = tx.update({'w': g}, s1, None)
+        u2, s2 = ta.update({'w': g}, s2, None)
+        np.testing.assert_allclose(np.asarray(u1['w']), np.asarray(u2['w']),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 5), n=st.integers(1, 5),
+       steps=st.integers(1, 5), variant=st.sampled_from(['I', 'II']))
+def test_tensor_path_matches_general_cover(seed, m, n, steps, variant):
+    """The production broadcast/keepdims implementation computes exactly the
+    paper's pseudocode over the rows+cols cover."""
+    tx = scale_by_sm3(variant)
+    state = tx.init({'w': jnp.zeros((m, n))})
+    cover = GeneralCover.rows_and_cols(m, n)
+    mu = jnp.zeros(cover.k)
+    w_ref = jnp.zeros(m * n)
+    ref_step = sm3_i_reference_step if variant == 'I' else sm3_ii_reference_step
+    for g in _grad_stream(seed, steps, (m, n)):
+        u, state = tx.update({'w': g}, state, None)
+        w_fast_delta = -np.asarray(u['w']).reshape(-1)
+        w_prev = np.asarray(w_ref)
+        w_ref, mu, _ = ref_step(w_ref, g.reshape(-1), mu, cover, 1.0)
+        np.testing.assert_allclose(w_fast_delta, np.asarray(w_ref) - w_prev,
+                                   rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=st.lists(st.integers(1, 9), min_size=0, max_size=4))
+def test_cover_shapes_and_memory(shape):
+    shapes = codim1_cover_shapes(shape)
+    if len(shape) <= 1:
+        assert shapes == [tuple(shape)]
+    else:
+        assert len(shapes) == len(shape)
+        for a, s in enumerate(shapes):
+            assert s[a] == shape[a]
+            assert all(x == 1 for i, x in enumerate(s) if i != a)
+    assert cover_memory_ratio(shape) >= 1.0 or np.prod(shape) < sum(
+        np.prod(s) for s in shapes)
+
+
+def test_zero_gradient_convention():
+    """0/0 := 0 — a parameter with no observed gradient is not updated."""
+    tx = scale_by_sm3('II')
+    g = jnp.zeros((3, 4))
+    state = tx.init({'w': g})
+    u, state = tx.update({'w': g}, state, None)
+    assert np.all(np.asarray(u['w']) == 0)
+    assert np.all(np.isfinite(np.asarray(u['w'])))
+
+
+def test_rank3_tensor_cover():
+    """Rank-3 cover: accumulators are per-axis keepdims maxima of ν'."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (3, 4, 5))
+    tx = scale_by_sm3('II')
+    state = tx.init({'w': g})
+    u, state = tx.update({'w': g}, state, None)
+    nu = jnp.square(g)  # first step: μ₀ = 0
+    mu = state.mu['w']
+    np.testing.assert_allclose(np.asarray(mu[0]),
+                               np.asarray(jnp.max(nu, axis=(1, 2),
+                                                  keepdims=True)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(mu[2]),
+                               np.asarray(jnp.max(nu, axis=(0, 1),
+                                                  keepdims=True)), rtol=1e-6)
+
+
+def test_sm3_ii_never_looser_than_sm3_i_in_training():
+    """Prop 3 end-to-end: run both variants on the same quadratic problem;
+    SM3-II's effective accumulators stay ≤ SM3-I's."""
+    key = jax.random.PRNGKey(1)
+    A = jax.random.normal(key, (8, 8)) / np.sqrt(8)
+
+    def loss(w):
+        return 0.5 * jnp.sum((A @ w['x'].reshape(-1)) ** 2)
+
+    tx1, tx2 = scale_by_sm3('I'), scale_by_sm3('II')
+    w = {'x': jnp.ones((2, 4))}
+    s1, s2 = tx1.init(w), tx2.init(w)
+    for _ in range(10):
+        g = jax.grad(loss)(w)
+        u1, s1 = tx1.update(g, s1, None)
+        u2, s2 = tx2.update(g, s2, None)
+        w = jax.tree.map(lambda p, u: p - 0.05 * u, w, u2)
+    mu1 = s1.mu['x'] if hasattr(s1, 'mu') else s1[0].mu['x']
+    mu2 = s2.mu['x'] if hasattr(s2, 'mu') else s2[0].mu['x']
+    for a, b in zip(mu2, mu1):
+        assert (np.asarray(a) <= np.asarray(b) + 1e-5).all()

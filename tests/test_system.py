@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests for the whole system: train → checkpoint →
+resume → serve on one architecture, plus the paper's core claim (memory →
+batch doubling) as an executable assertion."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.core import make_optimizer, tree_bytes
+from repro.core.base import OptimizerSpec
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.train import trainer
+
+
+def test_end_to_end_train_checkpoint_serve(tmp_path):
+    cfg, _ = get_config('stablelm-1.6b')
+    r = cfg.reduced(n_repeats=2, d_model=64, d_ff=128, vocab=256, seq=32)
+    opt = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.25,
+                                       extra={'warmup_steps': 5}))
+    ds = SyntheticLM(DataConfig(vocab=r.vocab, seq_len=32, global_batch=8))
+    mgr = CheckpointManager(str(tmp_path))
+
+    state, hist = trainer.train_loop(r, opt, ds, steps=40, microbatches=2,
+                                     log_every=10, checkpoint_mgr=mgr,
+                                     checkpoint_every=20)
+    assert hist[-1]['loss'] < hist[0]['loss'] - 0.5       # it learns
+    assert mgr.latest_step() == 40
+
+    # serve from the trained checkpoint
+    restored = mgr.restore_latest(state)
+    engine = ServeEngine(r, restored.params, batch_slots=2, max_len=64)
+    reqs = [Request(prompt=np.arange(6, dtype=np.int32), max_new_tokens=5)]
+    out = engine.generate(reqs)
+    assert len(out[0].output) == 5
+    assert all(0 <= t < r.vocab for t in out[0].output)
+
+    # trained model beats untrained on next-token accuracy
+    batch = {k: jnp.asarray(v) for k, v in ds.global_batch_at(999).items()}
+    _, m_trained = lm.lm_loss(restored.params, batch, r)
+    fresh = lm.init_params(jax.random.PRNGKey(7), r)
+    _, m_fresh = lm.lm_loss(fresh, batch, r)
+    assert float(m_trained['accuracy']) > float(m_fresh['accuracy'])
+
+
+def test_paper_claim_memory_funds_batch_doubling():
+    """Table 1/2 in miniature, as an assertion: SM3's optimizer state is
+    ≈half of Adam's — one full parameter-sized buffer freed."""
+    cfg, _ = get_config('transformer-big')
+    r = cfg.reduced(d_model=128, d_ff=256, n_repeats=2, vocab=512, seq=64)
+    params = lm.init_params(jax.random.PRNGKey(0), r)
+    d = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+    adam = make_optimizer(OptimizerSpec(name='adam', learning_rate=1e-3))
+    sm3 = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.1))
+    b_adam = tree_bytes(adam.init(params))
+    b_sm3 = tree_bytes(sm3.init(params))
+    assert b_adam >= 2 * d * 4 - 64                       # m+v
+    assert b_sm3 <= d * 4 + 0.02 * d * 4 + 4096           # momentum + ~ε
+    saving = b_adam - b_sm3
+    assert saving >= 0.95 * d * 4                          # ≈1 buffer freed
+
+
+@pytest.mark.slow
+def test_launch_train_cli_multidevice():
+    """The production CLI runs sharded training end to end (4 fake devices)
+    with checkpointing + auto-resume."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as ckpt:
+        env = dict(os.environ)
+        env.pop('XLA_FLAGS', None)
+        env['PYTHONPATH'] = 'src'
+        base = [sys.executable, '-m', 'repro.launch.train',
+                '--arch', 'stablelm-1.6b', '--reduced', '--devices', '4',
+                '--data', '2', '--model', '2', '--steps', '8',
+                '--global-batch', '8', '--microbatches', '2',
+                '--ckpt', ckpt, '--ckpt-every', '4']
+        cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out = subprocess.run(base, capture_output=True, text=True, cwd=cwd,
+                             env=env, timeout=550)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert 'done' in out.stdout
+        # resume pass: should pick up from step 8 and exit immediately
+        out2 = subprocess.run(base + ['--steps', '8'], capture_output=True,
+                              text=True, cwd=cwd, env=env, timeout=550)
+        assert out2.returncode == 0, out2.stderr[-2000:]
+        assert 'auto-resuming from step 8' in out2.stdout
