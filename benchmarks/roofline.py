@@ -46,6 +46,64 @@ def load(out_dir: str = 'experiments/dryrun', tag: str = ''):
     return rows
 
 
+# --------------------------------------------------------------------------
+# Optimizer-update HBM stream accounting (the fused-kernel speedup model).
+#
+# SM3's update is memory-bound (O(1) flops/byte), so its step time is the
+# bytes it streams through HBM. Per M×N parameter (kernels/sm3/sm3.py
+# docstring): the naive jnp transformation chain materializes ν'/u/m'
+# between stages — ~7 M×N streams — while the fused Pallas step reads
+# g, w, m and writes w', m' in one pass: ~4 streams. Accumulators are
+# Θ(Σ n_i) and stream once in + once out in both modes.
+# --------------------------------------------------------------------------
+
+UNFUSED_STREAMS = 7
+FUSED_STREAMS = 4
+
+STREAM_ARCHS = ['transformer-big', 'bert-large', 'stablelm-1.6b',
+                'mistral-nemo-12b']
+
+
+def optimizer_stream_rows(archs=None):
+    """Analytic fused-vs-unfused optimizer update bytes/time per arch
+    (full-size configs via eval_shape — nothing is allocated)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.covers import codim1_cover_shapes
+    from repro.launch.hlo_analysis import HBM_BW
+    from repro.models import lm
+
+    rows = []
+    for arch in archs or STREAM_ARCHS:
+        cfg, _ = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda c=cfg: lm.init_params(jax.random.PRNGKey(0), c))
+        p_bytes = sum(4 * int(np.prod(l.shape))
+                      for l in jax.tree.leaves(shapes))
+        acc_bytes = sum(4 * int(np.prod(s)) if s else 4
+                        for l in jax.tree.leaves(shapes)
+                        for s in codim1_cover_shapes(l.shape))
+        unfused = UNFUSED_STREAMS * p_bytes + 2 * acc_bytes
+        fused = FUSED_STREAMS * p_bytes + 2 * acc_bytes
+        rows.append({
+            'arch': arch,
+            'param_bytes': p_bytes,
+            'sm3_acc_bytes': acc_bytes,
+            'unfused_update_bytes': unfused,
+            'fused_update_bytes': fused,
+            't_unfused_ms': round(unfused / HBM_BW * 1e3, 3),
+            't_fused_ms': round(fused / HBM_BW * 1e3, 3),
+            'speedup': round(unfused / fused, 3),
+        })
+    return rows
+
+
+STREAM_HEADER = ['arch', 'param_bytes', 'sm3_acc_bytes',
+                 'unfused_update_bytes', 'fused_update_bytes',
+                 't_unfused_ms', 't_fused_ms', 'speedup']
+
+
 HEADER = ['arch', 'shape', 'mesh', 'kind', 't_compute_s', 't_memory_s',
           't_collective_s', 't_memory_bf16eq_s', 't_collective_bf16eq_s',
           'dominant', 'model_flops_per_chip',
@@ -53,8 +111,13 @@ HEADER = ['arch', 'shape', 'mesh', 'kind', 't_compute_s', 't_memory_s',
           'roofline_fraction_bf16eq']
 
 
-def main(tag: str = ''):
+def main(tag: str = '', archs=None):
     import os as _os
+    if tag == 'streams':
+        # fused-optimizer HBM stream model: python benchmarks/roofline.py
+        # streams [arch ...]
+        emit_csv(optimizer_stream_rows(archs), STREAM_HEADER)
+        return
     out_dir = _os.environ.get('ROOFLINE_DIR', 'experiments/dryrun')
     rows = load(out_dir=out_dir, tag=tag)
     if not rows:
@@ -71,4 +134,5 @@ def main(tag: str = ''):
 
 
 if __name__ == '__main__':
-    main(sys.argv[1] if len(sys.argv) > 1 else '')
+    main(sys.argv[1] if len(sys.argv) > 1 else '',
+         archs=sys.argv[2:] or None)

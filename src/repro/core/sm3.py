@@ -69,6 +69,25 @@ def _precondition(g: jnp.ndarray, nu: jnp.ndarray) -> jnp.ndarray:
     return g * rsqrt
 
 
+def _update_leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...],
+                    accumulator_dtype: jnp.dtype = jnp.float32,
+                    use_pallas: bool = False):
+    """One SM3-II preconditioner step for a single leaf: (u, new_mu).
+
+    The single source of truth for the leaf semantics — shared by
+    scale_by_sm3 and the fused mode's jnp fallback path."""
+    g32 = g.astype(accumulator_dtype)
+    if use_pallas and g.ndim == 2 and len(mu) == 2:
+        from repro.kernels.sm3 import ops as sm3_ops  # lazy: CPU default path stays dep-free
+        u, new_row, new_col = sm3_ops.sm3_ii_update(g32, mu[0], mu[1])
+        return u.astype(g.dtype), (new_row, new_col)
+    nu = _nu_from_mu(mu, g.shape) + jnp.square(g32)
+    u = _precondition(g32, nu)
+    new_mu = tuple(_max_over_others(nu, a) for a in range(len(mu))) \
+        if g.ndim >= 2 else (nu,)
+    return u.astype(g.dtype), new_mu
+
+
 def scale_by_sm3(variant: str = 'II',
                  accumulator_dtype: jnp.dtype = jnp.float32,
                  use_pallas: bool = False) -> base.GradientTransformation:
@@ -84,17 +103,9 @@ def scale_by_sm3(variant: str = 'II',
                           is_leaf=lambda x: isinstance(x, jnp.ndarray) or hasattr(x, 'shape'))
         return SM3State(mu=mu)
 
-    def _update_leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
-        g32 = g.astype(accumulator_dtype)
-        if use_pallas and g.ndim == 2 and len(mu) == 2:
-            from repro.kernels.sm3 import ops as sm3_ops  # lazy: CPU default path stays dep-free
-            u, new_row, new_col = sm3_ops.sm3_ii_update(g32, mu[0], mu[1])
-            return u.astype(g.dtype), (new_row, new_col)
-        nu = _nu_from_mu(mu, g.shape) + jnp.square(g32)
-        u = _precondition(g32, nu)
-        new_mu = tuple(_max_over_others(nu, a) for a in range(len(mu))) \
-            if g.ndim >= 2 else (nu,)
-        return u.astype(g.dtype), new_mu
+    def _leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
+        return _update_leaf_ii(g, mu, accumulator_dtype=accumulator_dtype,
+                               use_pallas=use_pallas)
 
     def _update_leaf_i(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
         g32 = g.astype(accumulator_dtype)
@@ -107,7 +118,7 @@ def scale_by_sm3(variant: str = 'II',
         u = _precondition(g32, nu)
         return u.astype(g.dtype), new_mu
 
-    leaf_update = _update_leaf_ii if variant == 'II' else _update_leaf_i
+    leaf_update = _leaf_ii if variant == 'II' else _update_leaf_i
 
     def update_fn(updates, state, params=None):
         del params
@@ -127,13 +138,32 @@ def sm3(learning_rate: base.ScalarOrSchedule,
         weight_decay: float = 0.0,
         clip_norm: Optional[float] = None,
         accumulator_dtype: jnp.dtype = jnp.float32,
-        use_pallas: bool = False) -> base.GradientTransformation:
+        use_pallas: bool = False,
+        fused: bool = False) -> base.GradientTransformation:
     """The full SM3 optimizer as used in the paper's experiments.
 
     Pipeline: [global-norm clip] → SM3 precondition → momentum(β1, EMA)
     → [decoupled weight decay] → −lr scaling. The paper uses β1 = 0.9
     (0.95 for the very large BERT batches) and *no* post-warmup LR decay.
+
+    ``fused=True`` returns a FusedGradientTransformation whose
+    ``fused_update`` executes the whole pipeline in single Pallas kernel
+    launches per parameter (see ``_fused_sm3`` for the dispatch rules):
+    rank≥2 tensors stream through ``kernels.sm3.ops.sm3_ii_fused_step``
+    (~4 instead of ~7 M×N HBM streams), rank≤1 leaves are packed into flat
+    2-D buckets and updated by one elementwise kernel launch. The state
+    pytree and the reference ``update`` semantics are identical to the
+    unfused chain, so checkpoints and sharding specs carry over.
     """
+    if fused:
+        if variant != 'II':
+            raise ValueError('fused=True implements SM3-II only '
+                             f'(got variant {variant!r})')
+        if jnp.dtype(accumulator_dtype) != jnp.dtype(jnp.float32):
+            raise ValueError('fused=True requires float32 accumulators '
+                             '(the kernels carry ν in f32)')
+        return _fused_sm3(learning_rate, beta1=beta1,
+                          weight_decay=weight_decay, clip_norm=clip_norm)
     chain = []
     if clip_norm is not None:
         chain.append(base.clip_by_global_norm(clip_norm))
@@ -145,6 +175,178 @@ def sm3(learning_rate: base.ScalarOrSchedule,
         chain.append(base.add_decayed_weights(weight_decay))
     chain.append(base.scale_by_learning_rate(learning_rate))
     return base.chain(*chain)
+
+
+# ---------------------------------------------------------------------------
+# Fused execution mode (the kernels' end-to-end wiring).
+#
+# Dispatch per leaf:
+#   rank ≥ 2, last dim > 1 : merged-2-D kernel path. The tensor is reshaped
+#       (n_1..n_p) → (Π n_{<p}, n_p) — a free view, no transpose — and the
+#       matrix kernel's row accumulator input is the *broadcast min of all
+#       leading co-dim-1 accumulators* (a Θ(Π n_{<p}) precompute, tiny next
+#       to the M×N streams). min(row, col) inside the kernel then equals the
+#       full p-way accumulator min, so ν, u, w', m' are EXACTLY the co-dim-1
+#       cover semantics of the reference; the leading accumulators are
+#       recovered from the kernel's row' output by cheap keepdims maxima.
+#   rank ≥ 2, last dim == 1 : degenerate column — jnp reference fallback.
+#   rank ≤ 1 : packed (per dtype pair) into one flat 2-D bucket and updated
+#       by a single elementwise kernel launch (full per-element accumulator,
+#       degenerate cover == Adagrad — matching scale_by_sm3) instead of
+#       hundreds of tiny per-leaf launches.
+#
+# Caveat: with beta1 == 0 the kernels still stream a zero momentum buffer
+# in and an unused m' out (~2 extra M×N streams) — the fused mode is tuned
+# for the paper's momentum configuration; prefer the unfused chain for
+# momentum-free SM3 if those streams matter.
+# ---------------------------------------------------------------------------
+
+_BUCKET_LANES = 256
+
+
+def _lead_min(mu: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """Broadcast min of all leading (non-last-axis) accumulators, (R, 1)."""
+    nu = mu[0]
+    for acc in mu[1:-1]:
+        nu = jnp.minimum(nu, acc)
+    return nu.reshape(-1, 1)
+
+
+def _mu_from_2d(row_new: jnp.ndarray, col_new: jnp.ndarray,
+                mu: Tuple[jnp.ndarray, ...], shape) -> Tuple[jnp.ndarray, ...]:
+    """Recover the p co-dim-1 accumulators from the merged-2-D kernel's
+    row'/col' outputs (max is associative, so this is exact)."""
+    p = len(shape)
+    new_last = col_new.reshape(mu[-1].shape)
+    lead_full = row_new.reshape(shape[:-1] + (1,))
+    if p == 2:
+        return (lead_full, new_last)
+    outs = []
+    for a in range(p - 1):
+        axes = tuple(b for b in range(p - 1) if b != a)
+        outs.append(jnp.max(lead_full, axis=axes, keepdims=True))
+    return tuple(outs) + (new_last,)
+
+
+def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
+               weight_decay: float, clip_norm: Optional[float]
+               ) -> base.FusedGradientTransformation:
+    reference = sm3(learning_rate, beta1=beta1, variant='II',
+                    weight_decay=weight_decay, clip_norm=clip_norm)
+    tags = []
+    if clip_norm is not None:
+        tags.append('clip')
+    tags.append('sm3')
+    if beta1:
+        tags.append('trace')
+    if weight_decay:
+        tags.append('wd')
+    tags.append('lr')
+
+    def _leaf_reference(p, m, g, mu, step_lr, gscale):
+        """Exact chain semantics for leaves the kernels don't cover."""
+        if clip_norm is not None:
+            g = (gscale * g.astype(jnp.float32)).astype(g.dtype)
+        u, new_mu = _update_leaf_ii(g, mu)
+        if beta1:
+            new_m = (beta1 * m.astype(jnp.float32)
+                     + (1.0 - beta1) * u.astype(jnp.float32)).astype(m.dtype)
+        else:
+            new_m = u
+        upd = new_m
+        if weight_decay:
+            upd = upd + weight_decay * p.astype(upd.dtype)
+        delta = (-step_lr * upd).astype(upd.dtype)
+        new_p = (p + delta.astype(p.dtype)).astype(p.dtype)
+        return new_p, new_m, new_mu
+
+    def fused_update(grads, state, params):
+        from repro.kernels.sm3 import ops as sm3_ops  # lazy, like use_pallas
+        st = dict(zip(tags, state))
+        count = st['lr'].count
+        step_lr = base._lr_at(learning_rate, count)
+        # clip: only the scalar factor is computed here; the kernels scale
+        # g in VMEM (gscale operand), so the scaled gradient tree is never
+        # materialized in HBM
+        gscale = 1.0 if clip_norm is None \
+            else base.global_norm_clip_scale(grads, clip_norm)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(st['sm3'].mu)
+        flat_m = treedef.flatten_up_to(st['trace'].momentum) if beta1 \
+            else [None] * len(flat_g)
+
+        n = len(flat_g)
+        new_p = [None] * n
+        new_m = [None] * n
+        new_mu = [None] * n
+        buckets = {}
+        for i, (g, p, mu, m) in enumerate(zip(flat_g, flat_p, flat_mu,
+                                              flat_m)):
+            if g.ndim >= 2 and g.shape[-1] > 1:
+                shape = g.shape
+                C = shape[-1]
+                g2 = g.reshape(-1, C)
+                w2 = p.reshape(-1, C)
+                m2 = (m if m is not None else jnp.zeros_like(p)
+                      ).reshape(-1, C)
+                w2n, m2n, row_n, col_n = sm3_ops.sm3_ii_fused_step(
+                    w2, m2, g2, _lead_min(mu), mu[-1].reshape(1, C),
+                    step_lr, beta1, wd=weight_decay, gscale=gscale)
+                new_p[i] = w2n.reshape(shape)
+                new_m[i] = m2n.reshape(shape)
+                new_mu[i] = _mu_from_2d(row_n, col_n, mu, shape)
+            elif g.ndim >= 2:
+                new_p[i], new_m[i], new_mu[i] = _leaf_reference(
+                    p, m, g, mu, step_lr, gscale)
+            else:
+                buckets.setdefault((p.dtype, g.dtype), []).append(i)
+
+        for _, idxs in sorted(buckets.items(), key=lambda kv: str(kv[0])):
+            gv = jnp.concatenate([flat_g[i].reshape(-1) for i in idxs])
+            wv = jnp.concatenate([flat_p[i].reshape(-1) for i in idxs])
+            mv = jnp.concatenate(
+                [(flat_m[i] if flat_m[i] is not None
+                  else jnp.zeros_like(flat_p[i])).reshape(-1)
+                 for i in idxs])
+            av = jnp.concatenate([flat_mu[i][0].reshape(-1) for i in idxs])
+            L = gv.size
+            rows = -(-L // _BUCKET_LANES)
+            pad = rows * _BUCKET_LANES - L
+            if pad:
+                gv, wv, mv, av = (jnp.pad(x, (0, pad))
+                                  for x in (gv, wv, mv, av))
+            shape2 = (rows, _BUCKET_LANES)
+            wb, mb, ab = sm3_ops.sm3_ii_fused_vec_step(
+                wv.reshape(shape2), mv.reshape(shape2), gv.reshape(shape2),
+                av.reshape(shape2), step_lr, beta1, wd=weight_decay,
+                gscale=gscale)
+            wb, mb, ab = wb.reshape(-1), mb.reshape(-1), ab.reshape(-1)
+            off = 0
+            for i in idxs:
+                size = flat_g[i].size
+                sl = slice(off, off + size)
+                new_p[i] = wb[sl].reshape(flat_p[i].shape)
+                new_m[i] = mb[sl].reshape(flat_p[i].shape)
+                new_mu[i] = (ab[sl].reshape(flat_mu[i][0].shape),)
+                off += size
+
+        out_state = []
+        for tag, s in zip(tags, state):
+            if tag == 'sm3':
+                out_state.append(SM3State(mu=treedef.unflatten(new_mu)))
+            elif tag == 'trace':
+                out_state.append(
+                    base.TraceState(momentum=treedef.unflatten(new_m)))
+            elif tag == 'lr':
+                out_state.append(base.ScaleByLrState(count=count + 1))
+            else:
+                out_state.append(s)
+        return treedef.unflatten(new_p), tuple(out_state)
+
+    return base.FusedGradientTransformation(
+        init=reference.init, update=reference.update,
+        fused_update=fused_update)
 
 
 # ---------------------------------------------------------------------------

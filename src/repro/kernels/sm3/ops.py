@@ -26,8 +26,26 @@ def sm3_ii_update(g: jnp.ndarray, row_mu: jnp.ndarray, col_mu: jnp.ndarray,
                                   interpret=_interpret())
 
 
-def sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1,
-                      bm: int = 256, bn: int = 256):
-    """(w', m', row_mu', col_mu') — fully fused optimizer step."""
-    return _k.sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1,
-                                bm=bm, bn=bn, interpret=_interpret())
+def sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1, mix=None,
+                      wd=0.0, gscale=1.0, bm: int = 256, bn: int = 256):
+    """(w', m', row_mu', col_mu') — fully fused optimizer step.
+
+    ``mix`` is the momentum blend coefficient (default ``1 - beta1``,
+    computed here in python-double precision so it rounds to the same f32
+    value as core.base.trace's weak-typed scalar — bit-exact parity).
+    ``wd`` is decoupled weight decay and ``gscale`` a global gradient scale
+    (e.g. the clip-by-global-norm factor); both are folded into the kernel
+    (w and g are already resident in VMEM — no extra HBM pass)."""
+    if mix is None:
+        mix = 1.0 - beta1
+    return _k.sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1, mix, wd,
+                                gscale, bm=bm, bn=bn, interpret=_interpret())
+
+
+def sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix=None, wd=0.0,
+                          gscale=1.0, bm: int = 16, bn: int = 256):
+    """(w', m', acc') — fused step for a 2-D bucket of packed 1-D params."""
+    if mix is None:
+        mix = 1.0 - beta1
+    return _k.sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix, wd, gscale,
+                                    bm=bm, bn=bn, interpret=_interpret())

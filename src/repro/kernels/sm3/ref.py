@@ -41,6 +41,26 @@ def sm3_ii_fused_step_ref(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
                                      jnp.ndarray, jnp.ndarray]:
     u, new_row, new_col = sm3_ii_precondition_ref(g, row_mu, col_mu)
     new_m = (beta1 * m.astype(jnp.float32)
-             + (1.0 - beta1) * u.astype(jnp.float32))
-    new_w = w.astype(jnp.float32) - lr * new_m
-    return (new_w.astype(w.dtype), new_m.astype(m.dtype), new_row, new_col)
+             + (1.0 - beta1) * u.astype(jnp.float32)).astype(m.dtype)
+    # per-stage rounding mirrors the unfused transformation chain: m' is
+    # stored, then the lr-scaled delta is cast, then subtracted in w.dtype
+    delta = (lr * new_m.astype(jnp.float32)).astype(w.dtype)
+    return (w - delta, new_m, new_row, new_col)
+
+
+def sm3_ii_fused_vec_step_ref(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                              acc: jnp.ndarray, lr: float, beta1: float
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """Oracle for the bucketed rank≤1 path: per-element (Adagrad) cover.
+
+        ν = acc + g²,  u = g/√ν (0/0 := 0)
+        m' = β1 m + (1-β1) u,  w' = w − lr·m',  acc' = ν
+    """
+    g32 = g.astype(jnp.float32)
+    nu = acc + jnp.square(g32)
+    u = jnp.where(nu > 0, g32 * jax.lax.rsqrt(jnp.maximum(nu, 1e-38)), 0.0)
+    new_m = (beta1 * m.astype(jnp.float32)
+             + (1.0 - beta1) * u).astype(m.dtype)
+    delta = (lr * new_m.astype(jnp.float32)).astype(w.dtype)
+    return w - delta, new_m, nu.astype(acc.dtype)

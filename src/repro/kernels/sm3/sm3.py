@@ -60,13 +60,29 @@ def _precondition_kernel(g_ref, row_ref, col_ref,
 def _fused_kernel(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
                   w_out_ref, m_out_ref, nrow_ref, cpart_ref):
     j = pl.program_id(1)
-    nu, u = _nu_u(g_ref[...], row_ref[...], col_ref[...])
     lr = lr_beta_ref[0, 0]
     beta1 = lr_beta_ref[0, 1]
-    new_m = beta1 * m_ref[...].astype(jnp.float32) + (1.0 - beta1) * u
-    m_out_ref[...] = new_m.astype(m_out_ref.dtype)
-    w_out_ref[...] = (w_ref[...].astype(jnp.float32) - lr * new_m).astype(
-        w_out_ref.dtype)
+    mix = lr_beta_ref[0, 2]
+    wd = lr_beta_ref[0, 3]
+    gscale = lr_beta_ref[0, 4]
+    # per-stage rounding mirrors the unfused chain's casts (all no-ops for
+    # f32, which stays bit-exact): the clip scale and u round to the
+    # gradient dtype (clip/scale_by_sm3 output casts), m' to its storage
+    # dtype before the lr multiply, the wd term is taken in the update
+    # dtype, and the delta rounds before the subtract. bf16 lands within
+    # 1-2 ulp of the eager chain: XLA's bf16 normalization may elide
+    # bf16->f32 round-trips inside a fused body, so exact bf16 bit parity
+    # with an op-by-op reference is not achievable
+    g = (gscale * g_ref[...].astype(jnp.float32)).astype(g_ref.dtype)
+    nu, u = _nu_u(g, row_ref[...], col_ref[...])
+    u = u.astype(g_ref.dtype).astype(jnp.float32)
+    new_m = (beta1 * m_ref[...].astype(jnp.float32) + mix * u).astype(
+        m_out_ref.dtype)
+    m_out_ref[...] = new_m
+    upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
+        m_out_ref.dtype)
+    delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    w_out_ref[...] = w_ref[...] - delta
     row_max = jnp.max(nu, axis=1, keepdims=True)
 
     @pl.when(j == 0)
@@ -126,10 +142,78 @@ def sm3_ii_precondition(g: jnp.ndarray, row_mu: jnp.ndarray,
     return u[:M, :N], nrow[:M], new_col[:, :N]
 
 
+def _fused_vec_kernel(lr_beta_ref, w_ref, m_ref, g_ref, acc_ref,
+                      w_out_ref, m_out_ref, acc_out_ref):
+    """Bucketed rank≤1 leaves: per-element (Adagrad) accumulator, so the
+    update is pure elementwise — no cross-block reductions at all."""
+    lr = lr_beta_ref[0, 0]
+    beta1 = lr_beta_ref[0, 1]
+    mix = lr_beta_ref[0, 2]
+    wd = lr_beta_ref[0, 3]
+    gscale = lr_beta_ref[0, 4]
+    # same per-stage rounding as _fused_kernel (see comment there)
+    g = (gscale * g_ref[...].astype(jnp.float32)).astype(g_ref.dtype)
+    g32 = g.astype(jnp.float32)
+    nu = acc_ref[...] + jnp.square(g32)
+    u = jnp.where(nu > 0, g32 * jax.lax.rsqrt(jnp.maximum(nu, 1e-38)), 0.0)
+    u = u.astype(g_ref.dtype).astype(jnp.float32)
+    new_m = (beta1 * m_ref[...].astype(jnp.float32) + mix * u).astype(
+        m_out_ref.dtype)
+    m_out_ref[...] = new_m
+    upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
+        m_out_ref.dtype)
+    delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    w_out_ref[...] = w_ref[...] - delta
+    acc_out_ref[...] = nu
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
+def sm3_ii_fused_vec_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                          acc: jnp.ndarray, lr, beta1, mix, wd, gscale, *,
+                          bm: int = 16, bn: int = 256,
+                          interpret: bool = True
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused SM3 step over a 2-D *bucket* of packed rank-0/1 parameters.
+
+    Rank≤1 leaves keep a full per-element accumulator (degenerate cover ==
+    Adagrad, matching core.sm3), so the whole bucket is one elementwise
+    kernel: ν = acc + g², u = g/√ν (0/0 := 0), m' = β1 m + (1−β1) u,
+    w' = w − lr·m', acc' = ν. Zero padding is inert: g = 0 ⇒ u = 0 and
+    acc' = acc, and padded cells are sliced away by the caller anyway.
+    Returns (w', m', acc')."""
+    M, N = g.shape
+    wp, mp, gp = _pad2(w, bm, bn), _pad2(m, bm, bn), _pad2(g, bm, bn)
+    ap = _pad2(acc, bm, bn)
+    Mp, Np = gp.shape
+    gm, gn = Mp // bm, Np // bn
+    lr_beta = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(beta1, jnp.float32),
+                         jnp.asarray(mix, jnp.float32),
+                         jnp.asarray(wd, jnp.float32),
+                         jnp.asarray(gscale, jnp.float32)]).reshape(1, 5)
+
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    w2, m2, a2 = pl.pallas_call(
+        _fused_vec_kernel,
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec((1, 5), lambda i, j: (0, 0)),
+                  tile, tile, tile, tile],
+        out_specs=[tile, tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Np), w.dtype),
+            jax.ShapeDtypeStruct((Mp, Np), m.dtype),
+            jax.ShapeDtypeStruct((Mp, Np), acc.dtype),
+        ],
+        interpret=interpret,
+    )(lr_beta, wp, mp, gp, ap)
+    return w2[:M, :N], m2[:M, :N], a2[:M, :N]
+
+
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
 def sm3_ii_fused_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
                       row_mu: jnp.ndarray, col_mu: jnp.ndarray,
-                      lr, beta1, *, bm: int = 256, bn: int = 256,
+                      lr, beta1, mix, wd, gscale, *,
+                      bm: int = 256, bn: int = 256,
                       interpret: bool = True
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                  jnp.ndarray, jnp.ndarray]:
@@ -141,13 +225,16 @@ def sm3_ii_fused_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
     Mp, Np = gp.shape
     gm, gn = Mp // bm, Np // bn
     lr_beta = jnp.stack([jnp.asarray(lr, jnp.float32),
-                         jnp.asarray(beta1, jnp.float32)]).reshape(1, 2)
+                         jnp.asarray(beta1, jnp.float32),
+                         jnp.asarray(mix, jnp.float32),
+                         jnp.asarray(wd, jnp.float32),
+                         jnp.asarray(gscale, jnp.float32)]).reshape(1, 5)
 
     w2, m2, nrow, cpart = pl.pallas_call(
         _fused_kernel,
         grid=(gm, gn),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),  # lr/beta scalars
+            pl.BlockSpec((1, 5), lambda i, j: (0, 0)),  # lr/beta scalars
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),

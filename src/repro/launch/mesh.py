@@ -15,11 +15,21 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh with a version-compat guard: ``axis_types`` (and the
+    ``jax.sharding.AxisType`` enum) only exist in newer jax; older releases
+    default every axis to Auto, which is exactly what we want."""
+    axis_type = getattr(jax.sharding, 'AxisType', None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -27,6 +37,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     used by sharding unit tests."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ('data', 'model'),
-                         axis_types=axis_types)
+    return _make_mesh((data, model), ('data', 'model'))

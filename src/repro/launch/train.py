@@ -31,6 +31,9 @@ def _parse():
     ap.add_argument('--model', type=int, default=1)
     ap.add_argument('--ckpt', default='')
     ap.add_argument('--ckpt-every', type=int, default=0)
+    ap.add_argument('--fused', action='store_true',
+                    help='fused SM3-II execution mode: weight + momentum + '
+                         'accumulator update in one Pallas kernel per param')
     ap.add_argument('--compression', default='',
                     choices=['', 'int8'])
     ap.add_argument('--log-every', type=int, default=10)
@@ -57,9 +60,14 @@ def main():
     cfg, meta = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(seq=args.seq)
+    extra = {'warmup_steps': args.warmup}
+    if args.fused:
+        if args.optimizer not in ('sm3', 'sm3-ii'):
+            raise SystemExit('--fused is only supported with --optimizer sm3')
+        extra['fused'] = True
     opt = make_optimizer(
         OptimizerSpec(name=args.optimizer, learning_rate=args.lr,
-                      extra={'warmup_steps': args.warmup}),
+                      extra=extra),
         total_steps=args.steps, d_model=cfg.d_model)
 
     mesh = make_host_mesh(data=args.data, model=args.model)
@@ -95,6 +103,10 @@ def main():
                                     pod_compression=args.compression or None,
                                     mesh=mesh if args.compression else None),
             in_shardings=shr.as_shardings((sspecs, bspecs), mesh),
+            # pin the state output layout: the fused path's merged-2-D
+            # reshapes defeat GSPMD sharding propagation for some mu leaves,
+            # and with donation the output must keep the input layout anyway
+            out_shardings=(shr.as_shardings(sspecs, mesh), None),
             donate_argnums=0)
         import time
         t0 = time.perf_counter()

@@ -127,10 +127,26 @@ def make_train_step(cfg: ModelConfig,
             grads, new_resid = apply_pod_compression(grads, ef)
             ef = compression.EFState(residual=new_resid)
         metrics['grad_norm'] = opt_base.global_norm(grads)
-        updates, opt_state = optimizer.update(grads, state.opt_state,
-                                              state.params)
-        params = opt_base.apply_updates(state.params, updates)
-        metrics['update_norm'] = opt_base.global_norm(updates)
+        if getattr(optimizer, 'fused_update', None) is not None:
+            # fused execution mode (e.g. sm3(fused=True)): the optimizer
+            # applies the parameter update itself in single kernel launches,
+            # never materializing the updates pytree in HBM.
+            params, opt_state = optimizer.fused_update(grads, state.opt_state,
+                                                       state.params)
+            # update_norm from the realized param delta: one fused
+            # subtract+square+reduce per leaf (XLA materializes no diff
+            # tree), at the cost of re-reading old+new params — and for
+            # bf16 params it misses sub-ulp updates the rounding absorbed
+            metrics['update_norm'] = jnp.sqrt(sum(
+                jnp.sum(jnp.square(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(state.params))))
+        else:
+            updates, opt_state = optimizer.update(grads, state.opt_state,
+                                                  state.params)
+            params = opt_base.apply_updates(state.params, updates)
+            metrics['update_norm'] = opt_base.global_norm(updates)
         return TrainState(step=state.step + 1, params=params,
                           opt_state=opt_state, ef=ef), metrics
 

@@ -71,6 +71,33 @@ def test_kernel_matches_core_sm3_semantics():
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize('shape', [(16, 256), (7, 300), (1, 130)])
+@pytest.mark.parametrize('dtype', DTYPES)
+def test_fused_vec_step_kernel(shape, dtype):
+    """Bucketed rank≤1 path: per-element accumulator, pure elementwise."""
+    g, _, _, w, m = _mk(jax.random.PRNGKey(13), shape, dtype)
+    acc = jnp.abs(jax.random.normal(jax.random.PRNGKey(14), shape,
+                                    jnp.float32))
+    out = ops.sm3_ii_fused_vec_step(w, m, g, acc, 0.2, 0.9)
+    outr = ref.sm3_ii_fused_vec_step_ref(w, m, g, acc, 0.2, 0.9)
+    for a, b in zip(out, outr):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_tol(dtype))
+
+
+def test_fused_vec_step_zero_gradient():
+    """g = 0 ⇒ u = 0 (0/0 := 0), accumulator unchanged, no NaNs."""
+    w = jax.random.normal(jax.random.PRNGKey(15), (4, 300))
+    m = jnp.zeros_like(w)
+    g = jnp.zeros_like(w)
+    acc = jnp.zeros(w.shape, jnp.float32)
+    w2, m2, a2 = ops.sm3_ii_fused_vec_step(w, m, g, acc, 0.2, 0.9)
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(w))
+    assert np.all(np.asarray(m2) == 0)
+    assert np.all(np.asarray(a2) == 0)
+    assert np.isfinite(np.asarray(w2)).all()
+
+
 def test_fused_step_sequence():
     """Multi-step: kernel-carried state stays consistent with the oracle."""
     key = jax.random.PRNGKey(11)

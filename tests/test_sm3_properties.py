@@ -1,27 +1,52 @@
 """Property tests for the paper's theoretical claims (Claim 2, Prop. 3) and
-algebraic identities of SM3-I/II."""
+algebraic identities of SM3-I/II.
+
+The properties are written as ``_check_*`` functions and driven two ways:
+
+* seeded ``pytest.mark.parametrize`` cases (always run — no third-party
+  deps, so tier-1 collection never fails), and
+* ``hypothesis`` ``@given`` wrappers as extras, only when the package is
+  importable (guarded the same way ``pytest.importorskip`` would skip them).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import scale_by_adagrad
 from repro.core.covers import GeneralCover, codim1_cover_shapes, cover_memory_ratio
 from repro.core.sm3 import (scale_by_sm3, sm3_i_reference_step,
                             sm3_ii_reference_step)
 
-# deterministic gradient streams for hypothesis
+try:  # optional extras — tier-1 must collect without hypothesis installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+# deterministic gradient streams shared by both drivers
 def _grad_stream(seed, steps, shape):
     key = jax.random.PRNGKey(seed)
     return [jax.random.normal(jax.random.fold_in(key, t), shape)
             for t in range(steps)]
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 2**16), m=st.integers(1, 6), n=st.integers(1, 6),
-       steps=st.integers(1, 6))
-def test_claim2_and_prop3_sandwich(seed, m, n, steps):
+def _cases(_n, _rng_seed, **ranges):
+    """_n deterministic pseudo-random cases drawn from inclusive ranges."""
+    rng = np.random.RandomState(_rng_seed)
+    out = []
+    for _ in range(_n):
+        out.append(tuple(int(rng.randint(lo, hi + 1))
+                         for lo, hi in ranges.values()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# property bodies
+# ---------------------------------------------------------------------------
+
+def _check_sandwich(seed, m, n, steps):
     """γ_t(i) ≤ ν'_t(i) ≤ ν_t(i), and both ν sequences are monotone."""
     cover = GeneralCover.rows_and_cols(m, n)
     d = m * n
@@ -45,10 +70,7 @@ def test_claim2_and_prop3_sandwich(seed, m, n, steps):
         prev_nu_i, prev_nu_ii = nu_i, nu_ii
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**16), d=st.integers(1, 12),
-       steps=st.integers(1, 5))
-def test_singleton_cover_is_adagrad(seed, d, steps):
+def _check_singleton_cover_is_adagrad(seed, d, steps):
     """Paper §3: with S_i = {i}, SM3-I ≡ Adagrad exactly."""
     tx = scale_by_sm3('I')
     ta = scale_by_adagrad()
@@ -61,10 +83,7 @@ def test_singleton_cover_is_adagrad(seed, d, steps):
                                    rtol=1e-6, atol=1e-7)
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**16), m=st.integers(1, 5), n=st.integers(1, 5),
-       steps=st.integers(1, 5), variant=st.sampled_from(['I', 'II']))
-def test_tensor_path_matches_general_cover(seed, m, n, steps, variant):
+def _check_tensor_path_matches_general_cover(seed, m, n, steps, variant):
     """The production broadcast/keepdims implementation computes exactly the
     paper's pseudocode over the rows+cols cover."""
     tx = scale_by_sm3(variant)
@@ -82,9 +101,7 @@ def test_tensor_path_matches_general_cover(seed, m, n, steps, variant):
                                    rtol=2e-5, atol=1e-6)
 
 
-@settings(max_examples=20, deadline=None)
-@given(shape=st.lists(st.integers(1, 9), min_size=0, max_size=4))
-def test_cover_shapes_and_memory(shape):
+def _check_cover_shapes_and_memory(shape):
     shapes = codim1_cover_shapes(shape)
     if len(shape) <= 1:
         assert shapes == [tuple(shape)]
@@ -96,6 +113,73 @@ def test_cover_shapes_and_memory(shape):
     assert cover_memory_ratio(shape) >= 1.0 or np.prod(shape) < sum(
         np.prod(s) for s in shapes)
 
+
+# ---------------------------------------------------------------------------
+# seeded parametrized drivers (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    'seed,m,n,steps',
+    _cases(12, 0, seed=(0, 2**16), m=(1, 6), n=(1, 6), steps=(1, 6)))
+def test_claim2_and_prop3_sandwich(seed, m, n, steps):
+    _check_sandwich(seed, m, n, steps)
+
+
+@pytest.mark.parametrize(
+    'seed,d,steps', _cases(8, 1, seed=(0, 2**16), d=(1, 12), steps=(1, 5)))
+def test_singleton_cover_is_adagrad(seed, d, steps):
+    _check_singleton_cover_is_adagrad(seed, d, steps)
+
+
+@pytest.mark.parametrize('variant', ['I', 'II'])
+@pytest.mark.parametrize(
+    'seed,m,n,steps', _cases(6, 2, seed=(0, 2**16), m=(1, 5), n=(1, 5),
+                             steps=(1, 5)))
+def test_tensor_path_matches_general_cover(seed, m, n, steps, variant):
+    _check_tensor_path_matches_general_cover(seed, m, n, steps, variant)
+
+
+@pytest.mark.parametrize('shape', [
+    (), (1,), (7,), (1, 1), (3, 4), (9, 2), (2, 3, 4), (5, 1, 6),
+    (1, 8, 3, 2), (4, 4, 4, 4)])
+def test_cover_shapes_and_memory(shape):
+    _check_cover_shapes_and_memory(shape)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis extras (skipped silently when the package is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), m=st.integers(1, 6),
+           n=st.integers(1, 6), steps=st.integers(1, 6))
+    def test_claim2_and_prop3_sandwich_hypothesis(seed, m, n, steps):
+        _check_sandwich(seed, m, n, steps)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), d=st.integers(1, 12),
+           steps=st.integers(1, 5))
+    def test_singleton_cover_is_adagrad_hypothesis(seed, d, steps):
+        _check_singleton_cover_is_adagrad(seed, d, steps)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), m=st.integers(1, 5),
+           n=st.integers(1, 5), steps=st.integers(1, 5),
+           variant=st.sampled_from(['I', 'II']))
+    def test_tensor_path_matches_general_cover_hypothesis(
+            seed, m, n, steps, variant):
+        _check_tensor_path_matches_general_cover(seed, m, n, steps, variant)
+
+    @settings(max_examples=20, deadline=None)
+    @given(shape=st.lists(st.integers(1, 9), min_size=0, max_size=4))
+    def test_cover_shapes_and_memory_hypothesis(shape):
+        _check_cover_shapes_and_memory(tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# fixed-case properties (unchanged from seed)
+# ---------------------------------------------------------------------------
 
 def test_zero_gradient_convention():
     """0/0 := 0 — a parameter with no observed gradient is not updated."""
