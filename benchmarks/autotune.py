@@ -1,0 +1,178 @@
+"""Tile autotune sweep for the SM3 Pallas kernels.
+
+Times the fused kernels over candidate (bm, bn) blocks per (shape, dtype,
+kind) and records the winners into the registry JSON consulted by
+``repro.kernels.sm3.tuning.choose_tiles`` (``--write``, default path =
+the in-tree ``autotune_registry.json``; point ``REPRO_SM3_TUNE_REGISTRY``
+elsewhere to keep a machine-local registry).
+
+    PYTHONPATH=src:. python benchmarks/autotune.py                # report
+    PYTHONPATH=src:. python benchmarks/autotune.py --write        # record
+    PYTHONPATH=src:. python benchmarks/autotune.py --arch bert-large
+    PYTHONPATH=src:. python benchmarks/autotune.py --shapes 512x512,300x257
+
+On TPU this times the compiled kernels and the recorded tiles are real
+winners; on CPU it times interpret mode — directional only, so ``--write``
+refuses unless ``--force`` is given. Sweep shapes default to the distinct
+merged-2-D shape buckets of ``--arch`` (the same grouping the stacked
+dispatch uses), capped by a size budget so the sweep stays tractable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_csv, emit_json, time_fn
+from repro.kernels.sm3 import ops, tuning
+
+# modest defaults so the CPU (interpret) sweep finishes; TPU runs can pass
+# --shapes / --max-elems for the full model
+DEFAULT_SHAPES = [(256, 256), (300, 257), (1024, 512)]
+CANDIDATES = [(64, 128), (128, 128), (128, 256), (256, 128), (256, 256),
+              (128, 512), (512, 256), (256, 512)]
+
+
+def arch_shapes(arch: str, max_elems: int):
+    """Distinct merged-2-D shape buckets of an arch's param tree."""
+    from repro.configs import get_config
+    from repro.models import lm
+    cfg, _ = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda c=cfg: lm.init_params(jax.random.PRNGKey(0), c))
+    out = set()
+    for l in jax.tree.leaves(shapes):
+        if l.ndim >= 2 and l.shape[-1] > 1:
+            C = l.shape[-1]
+            R = int(np.prod(l.shape)) // C
+            if R * C <= max_elems:
+                out.add((R, C))
+    return sorted(out)
+
+
+def _case(kind: str, M: int, N: int, dtype, stack: int):
+    """(args, fn(args, bm, bn)) timing exactly the kernel the registry key
+    names — winners recorded under a kind must be measured on that kind."""
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(0), 5)
+    g = jax.random.normal(k1, (M, N), dtype)
+    w = jax.random.normal(k2, (M, N), dtype)
+    row = jnp.abs(jax.random.normal(k3, (M, 1), jnp.float32))
+    col = jnp.abs(jax.random.normal(k4, (1, N), jnp.float32))
+    beta1 = 0.0 if kind.endswith('nomom') else 0.9
+    m = jnp.zeros_like(w) if beta1 else None
+    if kind == 'precond':
+        return (g, row, col), \
+            lambda a, bm, bn: ops.sm3_ii_update(*a, bm=bm, bn=bn)
+    if kind in ('vec', 'vec_nomom'):
+        acc = jnp.abs(jax.random.normal(k5, (M, N), jnp.float32))
+        return (w, m, g, acc), \
+            lambda a, bm, bn: ops.sm3_ii_fused_vec_step(
+                *a, 0.1, beta1, bm=bm, bn=bn)
+    if kind in ('stacked', 'stacked_nomom'):
+        st = lambda x: None if x is None else jnp.stack([x] * stack)
+        return (st(w), st(m), st(g), st(row), st(col)), \
+            lambda a, bm, bn: ops.sm3_ii_fused_stacked_step(
+                *a, 0.1, beta1, bm=bm, bn=bn)
+    if kind in ('fused', 'fused_nomom'):
+        return (w, m, g, row, col), \
+            lambda a, bm, bn: ops.sm3_ii_fused_step(
+                *a, 0.1, beta1, bm=bm, bn=bn)
+    raise ValueError(f'unknown kernel kind {kind!r} '
+                     f'(one of {sorted(tuning.KIND_STREAMS)})')
+
+
+def sweep(shapes, dtypes, kinds, iters: int = 3, stack: int = 2):
+    rows = []
+    winners = {}
+    for (M, N) in shapes:
+        for dtype in dtypes:
+            for kind in kinds:
+                key = tuning.registry_key(kind, M, N, dtype)
+                best = None
+                cands = sorted({(min(bm, -(-M // 8) * 8),
+                                 min(bn, -(-N // 128) * 128))
+                                for bm, bn in CANDIDATES})
+                args, fn = _case(kind, M, N, dtype, stack)
+                for bm_c, bn_c in cands:
+                    us = time_fn(fn, args, bm_c, bn_c,
+                                 warmup=1, iters=iters)
+                    rows.append({'kind': kind, 'shape': f'{M}x{N}',
+                                 'dtype': jnp.dtype(dtype).name,
+                                 'bm': bm_c, 'bn': bn_c,
+                                 'us': round(us, 1)})
+                    if best is None or us < best[0]:
+                        best = (us, (bm_c, bn_c))
+                winners[key] = list(best[1])
+                heur = tuning.choose_tiles(M, N, dtype=dtype, kind=kind,
+                                           use_registry=False)
+                rows.append({'kind': kind, 'shape': f'{M}x{N}',
+                             'dtype': jnp.dtype(dtype).name,
+                             'bm': best[1][0], 'bn': best[1][1],
+                             'us': round(best[0], 1),
+                             'winner': 1,
+                             'heuristic': f'{heur[0]}x{heur[1]}'})
+    return rows, winners
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='',
+                    help='sweep the distinct merged-2-D shapes of this '
+                         'arch instead of the default shape list')
+    ap.add_argument('--shapes', default='',
+                    help='comma list of MxN shapes to sweep')
+    ap.add_argument('--max-elems', type=int, default=1 << 20,
+                    help='skip arch shapes larger than this many elements')
+    ap.add_argument('--dtypes', default='float32')
+    ap.add_argument('--kinds', default='fused,stacked')
+    ap.add_argument('--iters', type=int, default=3)
+    ap.add_argument('--write', action='store_true',
+                    help='record winners into the tile registry '
+                         f'({tuning.registry_path()})')
+    ap.add_argument('--force', action='store_true',
+                    help='allow --write from a non-TPU (interpret-mode) '
+                         'sweep')
+    # explicit argv so benchmarks/run.py can call main() without this
+    # parser seeing the runner's own command line
+    args = ap.parse_args(argv or [])
+
+    if args.shapes:
+        shapes = [tuple(int(v) for v in s.split('x'))
+                  for s in args.shapes.split(',')]
+    elif args.arch:
+        shapes = arch_shapes(args.arch, args.max_elems)
+    else:
+        shapes = DEFAULT_SHAPES
+    dtypes = [jnp.dtype(d) for d in args.dtypes.split(',')]
+    kinds = args.kinds.split(',')
+
+    rows, winners = sweep(shapes, dtypes, kinds, iters=args.iters)
+    emit_csv(rows, ['kind', 'shape', 'dtype', 'bm', 'bn', 'us', 'winner',
+                    'heuristic'])
+    emit_json('autotune', rows)
+
+    if args.write:
+        if jax.default_backend() != 'tpu' and not args.force:
+            print('# not on TPU: interpret-mode timings are directional '
+                  'only — refusing --write (pass --force to override)')
+            return
+        path = tuning.registry_path()
+        try:
+            with open(path) as f:
+                registry = json.load(f)
+        except (OSError, ValueError):
+            registry = {}
+        registry.update(winners)
+        with open(path, 'w') as f:
+            json.dump(registry, f, indent=1, sort_keys=True)
+            f.write('\n')
+        tuning.refresh_registry()
+        print(f'# wrote {len(winners)} entries to {path}')
+
+
+if __name__ == '__main__':
+    main(sys.argv[1:])

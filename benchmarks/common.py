@@ -1,8 +1,11 @@
-"""Shared benchmark utilities: timing, CSV emission, small-model setup."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, small-model
+setup."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -30,6 +33,21 @@ def emit_csv(rows: List[Dict], header: List[str]) -> None:
     print(','.join(header))
     for r in rows:
         print(','.join(str(r.get(h, '')) for h in header))
+
+
+def emit_json(name: str, rows: List[Dict],
+              meta: Optional[Dict] = None) -> str:
+    """Write rows as ``$BENCH_OUT/<name>.json`` (default experiments/bench)
+    so BENCH_* trackers can diff runs without parsing stdout CSV. Returns
+    the path written."""
+    out_dir = os.environ.get('BENCH_OUT', 'experiments/bench')
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f'{name}.json')
+    with open(path, 'w') as f:
+        json.dump({'benchmark': name, **(meta or {}), 'rows': rows}, f,
+                  indent=1, sort_keys=True)
+    print(f'# json: {path}')
+    return path
 
 
 # The paper's hyperparameters (Table 3), scaled for CPU-size models.

@@ -12,7 +12,7 @@ import json
 import os
 import sys
 
-from benchmarks.common import emit_csv
+from benchmarks.common import emit_csv, emit_json
 
 
 def load(out_dir: str = 'experiments/dryrun', tag: str = ''):
@@ -55,6 +55,23 @@ def load(out_dir: str = 'experiments/dryrun', tag: str = ''):
 # between stages — ~7 M×N streams — while the fused Pallas step reads
 # g, w, m and writes w', m' in one pass: ~4 streams. Accumulators are
 # Θ(Σ n_i) and stream once in + once out in both modes.
+#
+# Launch accounting: per-leaf fused dispatch issues one Pallas launch per
+# rank≥2 leaf plus one per rank≤1 dtype bucket; the stacked dispatch
+# issues one per *distinct merged-2-D shape* bucket (core/sm3.py).
+#
+# Peak-transient-buffer model (extra HBM live at the update's high-water
+# mark, beyond the persistent params + optimizer state):
+#   unfused chain           : the materialized updates pytree + fresh
+#                             w'/m' + fresh accumulators before the old
+#                             ones die — ~3×params + accs.
+#   fused, no aliasing      : fresh w' + m' output buffers — 2×params.
+#   fused, aliased + donated: w'/m'/μ' overwrite their inputs
+#                             (input_output_aliases + donate_argnums); the
+#                             only transient is the stacked (K, M, N)
+#                             gather of the largest shape bucket (w, m, g
+#                             stacks; outputs alias the stacks) — 3×the
+#                             largest bucket, *not* O(params).
 # --------------------------------------------------------------------------
 
 UNFUSED_STREAMS = 7
@@ -65,8 +82,8 @@ STREAM_ARCHS = ['transformer-big', 'bert-large', 'stablelm-1.6b',
 
 
 def optimizer_stream_rows(archs=None):
-    """Analytic fused-vs-unfused optimizer update bytes/time per arch
-    (full-size configs via eval_shape — nothing is allocated)."""
+    """Analytic fused-vs-unfused optimizer update bytes/time/launches/peak
+    per arch (full-size configs via eval_shape — nothing is allocated)."""
     import jax
     import numpy as np
     from repro.configs import get_config
@@ -79,11 +96,28 @@ def optimizer_stream_rows(archs=None):
         cfg, _ = get_config(arch)
         shapes = jax.eval_shape(
             lambda c=cfg: lm.init_params(jax.random.PRNGKey(0), c))
-        p_bytes = sum(4 * int(np.prod(l.shape))
-                      for l in jax.tree.leaves(shapes))
+        leaves = jax.tree.leaves(shapes)
+        p_bytes = sum(4 * int(np.prod(l.shape)) for l in leaves)
         acc_bytes = sum(4 * int(np.prod(s)) if s else 4
-                        for l in jax.tree.leaves(shapes)
+                        for l in leaves
                         for s in codim1_cover_shapes(l.shape))
+        # mirror core/sm3.py's fused dispatch classes
+        mat_buckets = {}
+        n_mat = n_vec = n_degenerate = 0
+        for l in leaves:
+            if l.ndim >= 2 and l.shape[-1] > 1:
+                n_mat += 1
+                C = l.shape[-1]
+                R = int(np.prod(l.shape)) // C
+                mat_buckets.setdefault((R, C, str(l.dtype)), []).append(l)
+            elif l.ndim >= 2:
+                n_degenerate += 1
+            else:
+                n_vec += 1
+        vec_buckets = len({str(l.dtype) for l in leaves if l.ndim < 2})
+        max_bucket = max(
+            (4 * sum(int(np.prod(l.shape)) for l in b)
+             for b in mat_buckets.values()), default=0)
         unfused = UNFUSED_STREAMS * p_bytes + 2 * acc_bytes
         fused = FUSED_STREAMS * p_bytes + 2 * acc_bytes
         rows.append({
@@ -95,13 +129,22 @@ def optimizer_stream_rows(archs=None):
             't_unfused_ms': round(unfused / HBM_BW * 1e3, 3),
             't_fused_ms': round(fused / HBM_BW * 1e3, 3),
             'speedup': round(unfused / fused, 3),
+            'leaves': len(leaves),
+            'launches_per_leaf': n_mat + vec_buckets,
+            'launches_stacked': len(mat_buckets) + vec_buckets,
+            'peak_extra_unfused_bytes': 3 * p_bytes + acc_bytes,
+            'peak_extra_fused_bytes': 2 * p_bytes,
+            'peak_extra_fused_inplace_bytes': 3 * max_bucket,
         })
     return rows
 
 
 STREAM_HEADER = ['arch', 'param_bytes', 'sm3_acc_bytes',
                  'unfused_update_bytes', 'fused_update_bytes',
-                 't_unfused_ms', 't_fused_ms', 'speedup']
+                 't_unfused_ms', 't_fused_ms', 'speedup',
+                 'leaves', 'launches_per_leaf', 'launches_stacked',
+                 'peak_extra_unfused_bytes', 'peak_extra_fused_bytes',
+                 'peak_extra_fused_inplace_bytes']
 
 
 HEADER = ['arch', 'shape', 'mesh', 'kind', 't_compute_s', 't_memory_s',
@@ -116,7 +159,9 @@ def main(tag: str = '', archs=None):
     if tag == 'streams':
         # fused-optimizer HBM stream model: python benchmarks/roofline.py
         # streams [arch ...]
-        emit_csv(optimizer_stream_rows(archs), STREAM_HEADER)
+        stream_rows = optimizer_stream_rows(archs)
+        emit_csv(stream_rows, STREAM_HEADER)
+        emit_json('roofline_streams', stream_rows)
         return
     out_dir = _os.environ.get('ROOFLINE_DIR', 'experiments/dryrun')
     rows = load(out_dir=out_dir, tag=tag)

@@ -7,13 +7,16 @@
   fig5_accumulators Fig. 5  — accumulator tightness γ vs ν vs ν'
   step_time         §5 wall-time claim — per-step/update timings
   roofline          §Roofline — reads experiments/dryrun/*.json
+  autotune          SM3 kernel tile sweep (explicit only — writes the
+                    tile registry with --write; not part of the default
+                    run)
 """
 import sys
 import time
 
 
 def main() -> None:
-    from benchmarks import (fig2_convergence, fig3_batch_scaling,
+    from benchmarks import (autotune, fig2_convergence, fig3_batch_scaling,
                             fig5_accumulators, roofline, step_time,
                             table1_memory, table2_memory)
     mods = {
@@ -24,8 +27,9 @@ def main() -> None:
         'fig5_accumulators': fig5_accumulators,
         'step_time': step_time,
         'roofline': roofline,
+        'autotune': autotune,
     }
-    wanted = sys.argv[1:] or list(mods)
+    wanted = sys.argv[1:] or [m for m in mods if m != 'autotune']
     for name in wanted:
         print(f'\n===== {name} =====', flush=True)
         t0 = time.perf_counter()

@@ -6,10 +6,15 @@ in both modes), which isolates the paper's mechanism: fewer statistics →
 fewer memory accesses. Includes the Pallas fused kernel (interpret mode —
 correctness path, not a timing claim).
 
-``--fused`` adds the sm3-fused row: the fully-fused SM3-II execution mode
-(sm3(..., fused=True)), whose update_apply_us column times the
-single-kernel weight + momentum + accumulator step against the unfused
-sm3 transformation chain recorded alongside it.
+``--fused`` adds two rows: ``sm3-fused`` (shape-bucketed *stacked* kernels —
+one launch per distinct merged-2-D shape) and ``sm3-fused-per-leaf`` (the
+per-leaf dispatch, one launch per rank≥2 param), timed against the unfused
+sm3 transformation chain recorded alongside them. Every row also reports
+``launches`` — the number of Pallas kernel launches one update issues
+(counted at trace time; 0 for pure-jnp optimizers) — so the O(#leaves) →
+O(#distinct shapes) collapse is visible in the trajectory. A JSON copy of
+the table lands in $BENCH_OUT (default experiments/bench) for BENCH_*
+tracking.
 """
 from __future__ import annotations
 
@@ -20,15 +25,30 @@ import sys
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import PAPER_OPTS, emit_csv, small_lm, time_fn
+from benchmarks.common import PAPER_OPTS, emit_csv, emit_json, small_lm, time_fn
 from repro.core import base as opt_base
 from repro.core import make_optimizer
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.kernels.sm3 import ops as sm3_ops
 from repro.models import lm
 from repro.train import trainer
 
 FUSED_SPEC = dataclasses.replace(
     PAPER_OPTS['sm3'], extra={**PAPER_OPTS['sm3'].extra, 'fused': True})
+FUSED_PER_LEAF_SPEC = dataclasses.replace(
+    PAPER_OPTS['sm3'], extra={**PAPER_OPTS['sm3'].extra, 'fused': True,
+                              'stacked': False})
+
+HEADER = ['optimizer', 'train_step_us', 'update_apply_us', 'launches']
+
+
+def _count_launches(opt, grads, opt_state, params) -> int:
+    """Pallas launches one update+apply issues: abstract-trace the update
+    and read the ops-layer counter (one wrapper call == one launch)."""
+    sm3_ops.reset_launch_count()
+    jax.eval_shape(lambda g, s, p: opt_base.apply_gradients(opt, g, s, p),
+                   grads, opt_state, params)
+    return sm3_ops.launch_count()
 
 
 def run(include_fused: bool = False):
@@ -42,10 +62,12 @@ def run(include_fused: bool = False):
                                           cfg)[0])(params)
     names = ['adam', 'adagrad', 'adafactor', 'sm3']
     if include_fused:
-        names.append('sm3-fused')
+        names.extend(['sm3-fused', 'sm3-fused-per-leaf'])
     names.append('sgd')
     for name in names:
-        spec = FUSED_SPEC if name == 'sm3-fused' else PAPER_OPTS[name]
+        spec = {'sm3-fused': FUSED_SPEC,
+                'sm3-fused-per-leaf': FUSED_PER_LEAF_SPEC}.get(
+                    name, PAPER_OPTS.get(name))
         opt = make_optimizer(spec, d_model=cfg.d_model)
         state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt)
         step = jax.jit(trainer.make_train_step(cfg, opt))
@@ -60,7 +82,9 @@ def run(include_fused: bool = False):
         upd_us = time_fn(upd, grads, opt_state, params, warmup=2, iters=8)
         rows.append({'optimizer': name,
                      'train_step_us': round(full_us),
-                     'update_apply_us': round(upd_us)})
+                     'update_apply_us': round(upd_us),
+                     'launches': _count_launches(opt, grads, opt_state,
+                                                 params)})
     return rows
 
 
@@ -69,10 +93,12 @@ def main(argv=None):
     # parser seeing the runner's own command line
     ap = argparse.ArgumentParser()
     ap.add_argument('--fused', action='store_true',
-                    help='also record the fused SM3-II execution mode')
+                    help='also record the fused SM3-II execution mode '
+                         '(stacked and per-leaf dispatch)')
     args = ap.parse_args(argv or [])
     rows = run(include_fused=args.fused)
-    emit_csv(rows, ['optimizer', 'train_step_us', 'update_apply_us'])
+    emit_csv(rows, HEADER)
+    emit_json('step_time', rows, meta={'fused': bool(args.fused)})
     by = {r['optimizer']: r for r in rows}
     ratio = by['sm3']['update_apply_us'] / by['adam']['update_apply_us']
     print(f"# SM3 update / Adam update = {ratio:.2f} "
@@ -82,6 +108,9 @@ def main(argv=None):
         print(f"# fused SM3 update / unfused SM3 update = {fr:.2f} "
               f"(CPU interpret mode — correctness wiring; the HBM-stream "
               f"model is benchmarks/roofline.py streams)")
+        print(f"# launches: stacked {by['sm3-fused']['launches']} vs "
+              f"per-leaf {by['sm3-fused-per-leaf']['launches']} "
+              f"(O(#distinct shapes) vs O(#leaves))")
 
 
 if __name__ == '__main__':

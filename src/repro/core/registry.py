@@ -32,7 +32,8 @@ def make_optimizer(spec: Union[OptimizerSpec, dict],
                        weight_decay=spec.weight_decay,
                        clip_norm=spec.extra.get('clip_norm'),
                        use_pallas=spec.extra.get('use_pallas', False),
-                       fused=spec.extra.get('fused', False))
+                       fused=spec.extra.get('fused', False),
+                       stacked=spec.extra.get('stacked', True))
     if name == 'sm3-i':
         return sm3.sm3(lr, beta1=spec.beta1, variant='I',
                        weight_decay=spec.weight_decay,

@@ -2,50 +2,134 @@
 
 On TPU backends we run the compiled kernel; elsewhere (this CPU container)
 we run interpret=True, which executes the kernel body in Python and is the
-correctness-validation path mandated for this repo.
+correctness-validation path mandated for this repo. ``REPRO_PALLAS_INTERPRET``
+overrides the backend detection in both directions (1/true forces interpret,
+0/false forces the compiled path) so tests and benches can pin either mode.
+
+Block sizes default to the per-(shape, dtype) chooser in ``tuning`` (VMEM-
+budget heuristic overridden by the autotune registry recorded by
+``benchmarks/autotune.py``); explicit bm/bn always win.
+
+Every wrapper counts one kernel launch per call (at trace time under jit —
+one call site traced == one launch per step), so benchmarks and tests can
+assert launch counts per mode via ``reset_launch_count``/``launch_count``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import collections
+import os
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.sm3 import sm3 as _k
+from repro.kernels.sm3 import tuning
+
+_INTERPRET_ENV = 'REPRO_PALLAS_INTERPRET'
+
+_TRUE = ('1', 'true', 'yes', 'on')
+_FALSE = ('0', 'false', 'no', 'off')
 
 
 def _interpret() -> bool:
+    env = os.environ.get(_INTERPRET_ENV, '').strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f'{_INTERPRET_ENV}={env!r}: expected one of {_TRUE + _FALSE}')
     return jax.default_backend() != 'tpu'
 
 
+# -- launch accounting ------------------------------------------------------
+
+_launches: collections.Counter = collections.Counter()
+
+
+def reset_launch_count() -> None:
+    _launches.clear()
+
+
+def launch_count(kind: Optional[str] = None) -> int:
+    if kind is not None:
+        return _launches[kind]
+    return sum(_launches.values())
+
+
+def launch_counts() -> Dict[str, int]:
+    return dict(_launches)
+
+
+def _count(kind: str) -> None:
+    _launches[kind] += 1
+
+
+# -- kernel entry points ----------------------------------------------------
+
 def sm3_ii_update(g: jnp.ndarray, row_mu: jnp.ndarray, col_mu: jnp.ndarray,
-                  bm: int = 256, bn: int = 256
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                  bm: Optional[int] = None, bn: Optional[int] = None):
     """(u, row_mu', col_mu') — the preconditioner used by core.sm3."""
+    bm, bn = tuning.resolve(g.shape[0], g.shape[1], g.dtype, 'precond',
+                            bm, bn)
+    _count('precond')
     return _k.sm3_ii_precondition(g, row_mu, col_mu, bm=bm, bn=bn,
                                   interpret=_interpret())
 
 
 def sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1, mix=None,
-                      wd=0.0, gscale=1.0, bm: int = 256, bn: int = 256):
-    """(w', m', row_mu', col_mu') — fully fused optimizer step.
+                      wd=0.0, gscale=1.0,
+                      bm: Optional[int] = None, bn: Optional[int] = None):
+    """(w', m', row_mu', col_mu') — fully fused optimizer step; w/m/row_mu
+    alias their inputs (in-place update under jit).
 
     ``mix`` is the momentum blend coefficient (default ``1 - beta1``,
     computed here in python-double precision so it rounds to the same f32
     value as core.base.trace's weak-typed scalar — bit-exact parity).
     ``wd`` is decoupled weight decay and ``gscale`` a global gradient scale
     (e.g. the clip-by-global-norm factor); both are folded into the kernel
-    (w and g are already resident in VMEM — no extra HBM pass)."""
+    (w and g are already resident in VMEM — no extra HBM pass).
+    ``m=None`` runs the momentum-free kernel (β1 == 0 — no momentum stream
+    in either direction) and returns (w', row_mu', col_mu')."""
     if mix is None:
         mix = 1.0 - beta1
+    kind = 'fused' if m is not None else 'fused_nomom'
+    bm, bn = tuning.resolve(g.shape[0], g.shape[1], w.dtype, kind, bm, bn)
+    _count(kind)
     return _k.sm3_ii_fused_step(w, m, g, row_mu, col_mu, lr, beta1, mix, wd,
                                 gscale, bm=bm, bn=bn, interpret=_interpret())
 
 
-def sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix=None, wd=0.0,
-                          gscale=1.0, bm: int = 16, bn: int = 256):
-    """(w', m', acc') — fused step for a 2-D bucket of packed 1-D params."""
+def sm3_ii_fused_stacked_step(w, m, g, row_mu, col_mu, lr, beta1, mix=None,
+                              wd=0.0, gscale=1.0,
+                              bm: Optional[int] = None,
+                              bn: Optional[int] = None):
+    """Fused step over a (K, M, N) stack of same-shape leaves — one launch
+    per shape bucket. Same scalar conventions as ``sm3_ii_fused_step``;
+    returns (w', m', row_mu', col_mu'), or (w', row_mu', col_mu') with
+    ``m=None`` (momentum-free). w/m/row_mu alias their inputs."""
     if mix is None:
         mix = 1.0 - beta1
+    kind = 'stacked' if m is not None else 'stacked_nomom'
+    bm, bn = tuning.resolve(g.shape[1], g.shape[2], w.dtype, kind, bm, bn)
+    _count(kind)
+    return _k.sm3_ii_fused_stacked_step(w, m, g, row_mu, col_mu, lr, beta1,
+                                        mix, wd, gscale, bm=bm, bn=bn,
+                                        interpret=_interpret())
+
+
+def sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix=None, wd=0.0,
+                          gscale=1.0,
+                          bm: Optional[int] = None, bn: Optional[int] = None):
+    """(w', m', acc') — fused step for a 2-D bucket of packed 1-D params;
+    all three state buffers alias their inputs. ``m=None`` runs the
+    momentum-free kernel and returns (w', acc')."""
+    if mix is None:
+        mix = 1.0 - beta1
+    kind = 'vec' if m is not None else 'vec_nomom'
+    bm, bn = tuning.resolve(g.shape[0], g.shape[1], w.dtype, kind, bm, bn)
+    _count(kind)
     return _k.sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix, wd, gscale,
                                     bm=bm, bn=bn, interpret=_interpret())

@@ -18,18 +18,51 @@ multiple of 8 (sublanes) — and stream:
              per-row-block partials and reduce with a cheap jnp.max outside
              (M/bm × N f32 ≈ tiny vs the M×N streams).
 
+The *stacked* variant lifts the same kernel to a (K, M, N) batch of K
+same-shape leaves with a 3-D grid (K, M/bm, N/bn) — leaf index outermost, so
+the per-leaf row-accumulator revisit stays consecutive (fixed (l, i), j
+minormost) and one launch covers a whole shape bucket. All grid dimensions
+are annotated 'arbitrary' (sequential): the row' output carries a
+cross-iteration dependency over j, and the in-place aliasing below forbids
+reordering writes against reads.
+
+In-place state: every fused kernel declares ``input_output_aliases`` so w/m
+(and the accumulators where shapes permit) update *in place* — XLA reuses
+the input buffers for the outputs instead of allocating a fresh w'/m'/μ',
+removing the transient 2× parameter-memory spike of the non-aliased step.
+The aliasing is safe because each (block, grid-step) writes exactly the
+region it read at that same grid step (w/m), or flushes an output block
+(row') only after its aliased input region can never be re-fetched.
+
 Why fuse: the naive jnp composition materializes ν', u, m' in HBM. SM3 is
 memory-bound (O(1) flops/byte); fusion removes 3 extra HBM round-trips of the
 M×N tensors, taking the update from ~7 to ~4 M×N streams (g,w,m in; w,m out).
+With β1 = 0 the momentum-free kernels drop the m streams too (~2 in+out).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are unavailable on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _dim_semantics(n: int):
+    """All-'arbitrary' (sequential) grid annotation, or None off-TPU."""
+    if pltpu is None:
+        return None
+    try:
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=('arbitrary',) * n)
+    except Exception:  # pragma: no cover - older/newer pallas API drift
+        return None
 
 
 def _nu_u(g, row, col):
@@ -57,9 +90,11 @@ def _precondition_kernel(g_ref, row_ref, col_ref,
     cpart_ref[...] = jnp.max(nu, axis=0, keepdims=True)
 
 
-def _fused_kernel(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
-                  w_out_ref, m_out_ref, nrow_ref, cpart_ref):
-    j = pl.program_id(1)
+def _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
+                w_out_ref, m_out_ref, nrow_ref, cpart_ref, *, j):
+    """One VMEM tile of the fused step — shared by the 2-D and stacked
+    kernels (the reductions are axis-relative so block rank doesn't matter)
+    and by the momentum-free variants (m_ref/m_out_ref None)."""
     lr = lr_beta_ref[0, 0]
     beta1 = lr_beta_ref[0, 1]
     mix = lr_beta_ref[0, 2]
@@ -75,15 +110,22 @@ def _fused_kernel(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
     # with an op-by-op reference is not achievable
     g = (gscale * g_ref[...].astype(jnp.float32)).astype(g_ref.dtype)
     nu, u = _nu_u(g, row_ref[...], col_ref[...])
-    u = u.astype(g_ref.dtype).astype(jnp.float32)
-    new_m = (beta1 * m_ref[...].astype(jnp.float32) + mix * u).astype(
-        m_out_ref.dtype)
-    m_out_ref[...] = new_m
-    upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
-        m_out_ref.dtype)
-    delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    u = u.astype(g_ref.dtype)
+    if m_ref is not None:
+        new_m = (beta1 * m_ref[...].astype(jnp.float32)
+                 + mix * u.astype(jnp.float32)).astype(m_out_ref.dtype)
+        m_out_ref[...] = new_m
+        upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
+            m_out_ref.dtype)
+        delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    else:
+        # β1 == 0: no trace stage in the chain — the update stays in the
+        # gradient dtype end to end (wd and lr stages operate on u)
+        upd = u + wd.astype(u.dtype) * w_ref[...].astype(u.dtype)
+        delta = (lr * upd.astype(jnp.float32)).astype(u.dtype).astype(
+            w_out_ref.dtype)
     w_out_ref[...] = w_ref[...] - delta
-    row_max = jnp.max(nu, axis=1, keepdims=True)
+    row_max = jnp.max(nu, axis=-1, keepdims=True)
 
     @pl.when(j == 0)
     def _init():
@@ -93,15 +135,49 @@ def _fused_kernel(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
     def _acc():
         nrow_ref[...] = jnp.maximum(nrow_ref[...], row_max)
 
-    cpart_ref[...] = jnp.max(nu, axis=0, keepdims=True)
+    cpart_ref[...] = jnp.max(nu, axis=-2, keepdims=True)
+
+
+def _make_fused_kernel(jdim: int, momentum: bool):
+    """Kernel entry point for (2-D | stacked) × (momentum | momentum-free).
+    ``jdim`` is the grid axis that walks column blocks (1 for the 2-D
+    kernels, 2 for the stacked 3-D grid)."""
+    if momentum:
+        def kernel(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
+                   w_out_ref, m_out_ref, nrow_ref, cpart_ref):
+            _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
+                        w_out_ref, m_out_ref, nrow_ref, cpart_ref,
+                        j=pl.program_id(jdim))
+    else:
+        def kernel(lr_beta_ref, w_ref, g_ref, row_ref, col_ref,
+                   w_out_ref, nrow_ref, cpart_ref):
+            _fused_tile(lr_beta_ref, w_ref, None, g_ref, row_ref, col_ref,
+                        w_out_ref, None, nrow_ref, cpart_ref,
+                        j=pl.program_id(jdim))
+    return kernel
+
+
+_fused_kernel = _make_fused_kernel(1, True)
+_fused_nomom_kernel = _make_fused_kernel(1, False)
+_stacked_kernel = _make_fused_kernel(2, True)
+_stacked_nomom_kernel = _make_fused_kernel(2, False)
 
 
 def _pad2(x, bm, bn):
-    mpad = (-x.shape[0]) % bm
-    npad = (-x.shape[1]) % bn
+    mpad = (-x.shape[-2]) % bm
+    npad = (-x.shape[-1]) % bn
     if mpad or npad:
-        x = jnp.pad(x, ((0, mpad), (0, npad)))
+        pad = ((0, 0),) * (x.ndim - 2) + ((0, mpad), (0, npad))
+        x = jnp.pad(x, pad)
     return x
+
+
+def _scalars(lr, beta1, mix, wd, gscale):
+    return jnp.stack([jnp.asarray(lr, jnp.float32),
+                      jnp.asarray(beta1, jnp.float32),
+                      jnp.asarray(mix, jnp.float32),
+                      jnp.asarray(wd, jnp.float32),
+                      jnp.asarray(gscale, jnp.float32)]).reshape(1, 5)
 
 
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
@@ -136,6 +212,7 @@ def sm3_ii_precondition(g: jnp.ndarray, row_mu: jnp.ndarray,
             jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
             jax.ShapeDtypeStruct((gm, Np), jnp.float32),
         ],
+        compiler_params=_dim_semantics(2),
         interpret=interpret,
     )(gp, rp, cp)
     new_col = jnp.max(cpart, axis=0, keepdims=True)
@@ -146,33 +223,50 @@ def _fused_vec_kernel(lr_beta_ref, w_ref, m_ref, g_ref, acc_ref,
                       w_out_ref, m_out_ref, acc_out_ref):
     """Bucketed rank≤1 leaves: per-element (Adagrad) accumulator, so the
     update is pure elementwise — no cross-block reductions at all."""
+    _vec_tile(lr_beta_ref, w_ref, m_ref, g_ref, acc_ref,
+              w_out_ref, m_out_ref, acc_out_ref)
+
+
+def _fused_vec_nomom_kernel(lr_beta_ref, w_ref, g_ref, acc_ref,
+                            w_out_ref, acc_out_ref):
+    _vec_tile(lr_beta_ref, w_ref, None, g_ref, acc_ref,
+              w_out_ref, None, acc_out_ref)
+
+
+def _vec_tile(lr_beta_ref, w_ref, m_ref, g_ref, acc_ref,
+              w_out_ref, m_out_ref, acc_out_ref):
     lr = lr_beta_ref[0, 0]
     beta1 = lr_beta_ref[0, 1]
     mix = lr_beta_ref[0, 2]
     wd = lr_beta_ref[0, 3]
     gscale = lr_beta_ref[0, 4]
-    # same per-stage rounding as _fused_kernel (see comment there)
+    # same per-stage rounding as _fused_tile (see comment there)
     g = (gscale * g_ref[...].astype(jnp.float32)).astype(g_ref.dtype)
     g32 = g.astype(jnp.float32)
     nu = acc_ref[...] + jnp.square(g32)
     u = jnp.where(nu > 0, g32 * jax.lax.rsqrt(jnp.maximum(nu, 1e-38)), 0.0)
-    u = u.astype(g_ref.dtype).astype(jnp.float32)
-    new_m = (beta1 * m_ref[...].astype(jnp.float32) + mix * u).astype(
-        m_out_ref.dtype)
-    m_out_ref[...] = new_m
-    upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
-        m_out_ref.dtype)
-    delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    u = u.astype(g_ref.dtype)
+    if m_ref is not None:
+        new_m = (beta1 * m_ref[...].astype(jnp.float32)
+                 + mix * u.astype(jnp.float32)).astype(m_out_ref.dtype)
+        m_out_ref[...] = new_m
+        upd = new_m + wd.astype(m_out_ref.dtype) * w_ref[...].astype(
+            m_out_ref.dtype)
+        delta = (lr * upd.astype(jnp.float32)).astype(w_out_ref.dtype)
+    else:
+        upd = u + wd.astype(u.dtype) * w_ref[...].astype(u.dtype)
+        delta = (lr * upd.astype(jnp.float32)).astype(u.dtype).astype(
+            w_out_ref.dtype)
     w_out_ref[...] = w_ref[...] - delta
     acc_out_ref[...] = nu
 
 
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
-def sm3_ii_fused_vec_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
-                          acc: jnp.ndarray, lr, beta1, mix, wd, gscale, *,
+def sm3_ii_fused_vec_step(w: jnp.ndarray, m: Optional[jnp.ndarray],
+                          g: jnp.ndarray, acc: jnp.ndarray,
+                          lr, beta1, mix, wd, gscale, *,
                           bm: int = 16, bn: int = 256,
-                          interpret: bool = True
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                          interpret: bool = True):
     """Fused SM3 step over a 2-D *bucket* of packed rank-0/1 parameters.
 
     Rank≤1 leaves keep a full per-element accumulator (degenerate cover ==
@@ -180,19 +274,34 @@ def sm3_ii_fused_vec_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
     kernel: ν = acc + g², u = g/√ν (0/0 := 0), m' = β1 m + (1−β1) u,
     w' = w − lr·m', acc' = ν. Zero padding is inert: g = 0 ⇒ u = 0 and
     acc' = acc, and padded cells are sliced away by the caller anyway.
-    Returns (w', m', acc')."""
+    ``m=None`` selects the momentum-free kernel (β1 == 0): the momentum
+    buffer is neither streamed in nor out. Returns (w', m', acc'), or
+    (w', acc') when ``m`` is None. w/m/acc are aliased in place."""
     M, N = g.shape
-    wp, mp, gp = _pad2(w, bm, bn), _pad2(m, bm, bn), _pad2(g, bm, bn)
+    wp, gp = _pad2(w, bm, bn), _pad2(g, bm, bn)
     ap = _pad2(acc, bm, bn)
     Mp, Np = gp.shape
     gm, gn = Mp // bm, Np // bn
-    lr_beta = jnp.stack([jnp.asarray(lr, jnp.float32),
-                         jnp.asarray(beta1, jnp.float32),
-                         jnp.asarray(mix, jnp.float32),
-                         jnp.asarray(wd, jnp.float32),
-                         jnp.asarray(gscale, jnp.float32)]).reshape(1, 5)
+    lr_beta = _scalars(lr, beta1, mix, wd, gscale)
 
     tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if m is None:
+        w2, a2 = pl.pallas_call(
+            _fused_vec_nomom_kernel,
+            grid=(gm, gn),
+            in_specs=[pl.BlockSpec((1, 5), lambda i, j: (0, 0)),
+                      tile, tile, tile],
+            out_specs=[tile, tile],
+            out_shape=[
+                jax.ShapeDtypeStruct((Mp, Np), w.dtype),
+                jax.ShapeDtypeStruct((Mp, Np), acc.dtype),
+            ],
+            input_output_aliases={1: 0, 3: 1},
+            compiler_params=_dim_semantics(2),
+            interpret=interpret,
+        )(lr_beta, wp, gp, ap)
+        return w2[:M, :N], a2[:M, :N]
+    mp = _pad2(m, bm, bn)
     w2, m2, a2 = pl.pallas_call(
         _fused_vec_kernel,
         grid=(gm, gn),
@@ -204,56 +313,143 @@ def sm3_ii_fused_vec_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
             jax.ShapeDtypeStruct((Mp, Np), m.dtype),
             jax.ShapeDtypeStruct((Mp, Np), acc.dtype),
         ],
+        input_output_aliases={1: 0, 2: 1, 4: 2},
+        compiler_params=_dim_semantics(2),
         interpret=interpret,
     )(lr_beta, wp, mp, gp, ap)
     return w2[:M, :N], m2[:M, :N], a2[:M, :N]
 
 
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
-def sm3_ii_fused_step(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+def sm3_ii_fused_step(w: jnp.ndarray, m: Optional[jnp.ndarray],
+                      g: jnp.ndarray,
                       row_mu: jnp.ndarray, col_mu: jnp.ndarray,
                       lr, beta1, mix, wd, gscale, *,
                       bm: int = 256, bn: int = 256,
-                      interpret: bool = True
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                 jnp.ndarray, jnp.ndarray]:
-    """Fully fused SM3-II step: (w', m', row_mu', col_mu')."""
+                      interpret: bool = True):
+    """Fully fused SM3-II step: (w', m', row_mu', col_mu').
+
+    ``m=None`` selects the momentum-free kernel (β1 == 0) — no momentum
+    buffer is streamed either way and the return is (w', row_mu', col_mu').
+    w, m and row_mu are updated in place via input_output_aliases; col_mu'
+    is reduced from per-row-block partials so it allocates a fresh (1, N)."""
     M, N = g.shape
-    wp, mp, gp = _pad2(w, bm, bn), _pad2(m, bm, bn), _pad2(g, bm, bn)
+    wp, gp = _pad2(w, bm, bn), _pad2(g, bm, bn)
     rp = _pad2(row_mu, bm, 1)
     cp = _pad2(col_mu, 1, bn)
     Mp, Np = gp.shape
     gm, gn = Mp // bm, Np // bn
-    lr_beta = jnp.stack([jnp.asarray(lr, jnp.float32),
-                         jnp.asarray(beta1, jnp.float32),
-                         jnp.asarray(mix, jnp.float32),
-                         jnp.asarray(wd, jnp.float32),
-                         jnp.asarray(gscale, jnp.float32)]).reshape(1, 5)
+    lr_beta = _scalars(lr, beta1, mix, wd, gscale)
 
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    row_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+    col_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    cpart_spec = pl.BlockSpec((1, bn), lambda i, j: (i, j))
+    if m is None:
+        w2, nrow, cpart = pl.pallas_call(
+            _fused_nomom_kernel,
+            grid=(gm, gn),
+            in_specs=[pl.BlockSpec((1, 5), lambda i, j: (0, 0)),
+                      tile, tile, row_spec, col_spec],
+            out_specs=[tile, row_spec, cpart_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((Mp, Np), w.dtype),
+                jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
+                jax.ShapeDtypeStruct((gm, Np), jnp.float32),
+            ],
+            input_output_aliases={1: 0, 3: 1},
+            compiler_params=_dim_semantics(2),
+            interpret=interpret,
+        )(lr_beta, wp, gp, rp, cp)
+        new_col = jnp.max(cpart, axis=0, keepdims=True)
+        return w2[:M, :N], nrow[:M], new_col[:, :N]
+    mp = _pad2(m, bm, bn)
     w2, m2, nrow, cpart = pl.pallas_call(
         _fused_kernel,
         grid=(gm, gn),
         in_specs=[
             pl.BlockSpec((1, 5), lambda i, j: (0, 0)),  # lr/beta scalars
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            tile, tile, tile, row_spec, col_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
-        ],
+        out_specs=[tile, tile, row_spec, cpart_spec],
         out_shape=[
             jax.ShapeDtypeStruct((Mp, Np), w.dtype),
             jax.ShapeDtypeStruct((Mp, Np), m.dtype),
             jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
             jax.ShapeDtypeStruct((gm, Np), jnp.float32),
         ],
+        input_output_aliases={1: 0, 2: 1, 4: 2},
+        compiler_params=_dim_semantics(2),
         interpret=interpret,
     )(lr_beta, wp, mp, gp, rp, cp)
     new_col = jnp.max(cpart, axis=0, keepdims=True)
     return w2[:M, :N], m2[:M, :N], nrow[:M], new_col[:, :N]
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'bn', 'interpret'))
+def sm3_ii_fused_stacked_step(w: jnp.ndarray, m: Optional[jnp.ndarray],
+                              g: jnp.ndarray,
+                              row_mu: jnp.ndarray, col_mu: jnp.ndarray,
+                              lr, beta1, mix, wd, gscale, *,
+                              bm: int = 256, bn: int = 256,
+                              interpret: bool = True):
+    """Fused SM3-II step over a *stack* of K same-shape leaves.
+
+    Inputs are (K, M, N) for w/m/g, (K, M, 1) row accumulators and
+    (K, 1, N) column accumulators — one shape bucket of the merged-2-D
+    view. A single pallas_call with grid (K, M/bm, N/bn), leaf index
+    outermost, updates the whole bucket: launches drop from O(#leaves) to
+    O(#distinct shapes). Per leaf the semantics are exactly
+    ``sm3_ii_fused_step`` (the row-accumulator consecutive-revisit trick
+    holds because j stays minormost within each leaf). ``m=None`` selects
+    the momentum-free kernel (β1 == 0). Returns (w', m', row_mu', col_mu')
+    or (w', row_mu', col_mu'); w/m/row_mu alias their inputs in place."""
+    K, M, N = g.shape
+    wp, gp = _pad2(w, bm, bn), _pad2(g, bm, bn)
+    rp = _pad2(row_mu, bm, 1)
+    cp = _pad2(col_mu, 1, bn)
+    _, Mp, Np = gp.shape
+    gm, gn = Mp // bm, Np // bn
+    lr_beta = _scalars(lr, beta1, mix, wd, gscale)
+
+    tile = pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j))
+    row_spec = pl.BlockSpec((1, bm, 1), lambda l, i, j: (l, i, 0))
+    col_spec = pl.BlockSpec((1, 1, bn), lambda l, i, j: (l, 0, j))
+    cpart_spec = pl.BlockSpec((1, 1, bn), lambda l, i, j: (l, i, j))
+    if m is None:
+        w2, nrow, cpart = pl.pallas_call(
+            _stacked_nomom_kernel,
+            grid=(K, gm, gn),
+            in_specs=[pl.BlockSpec((1, 5), lambda l, i, j: (0, 0)),
+                      tile, tile, row_spec, col_spec],
+            out_specs=[tile, row_spec, cpart_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((K, Mp, Np), w.dtype),
+                jax.ShapeDtypeStruct((K, Mp, 1), jnp.float32),
+                jax.ShapeDtypeStruct((K, gm, Np), jnp.float32),
+            ],
+            input_output_aliases={1: 0, 3: 1},
+            compiler_params=_dim_semantics(3),
+            interpret=interpret,
+        )(lr_beta, wp, gp, rp, cp)
+        new_col = jnp.max(cpart, axis=1, keepdims=True)
+        return w2[:, :M, :N], nrow[:, :M], new_col[:, :, :N]
+    mp = _pad2(m, bm, bn)
+    w2, m2, nrow, cpart = pl.pallas_call(
+        _stacked_kernel,
+        grid=(K, gm, gn),
+        in_specs=[pl.BlockSpec((1, 5), lambda l, i, j: (0, 0)),
+                  tile, tile, tile, row_spec, col_spec],
+        out_specs=[tile, tile, row_spec, cpart_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, Mp, Np), w.dtype),
+            jax.ShapeDtypeStruct((K, Mp, Np), m.dtype),
+            jax.ShapeDtypeStruct((K, Mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((K, gm, Np), jnp.float32),
+        ],
+        input_output_aliases={1: 0, 2: 1, 4: 2},
+        compiler_params=_dim_semantics(3),
+        interpret=interpret,
+    )(lr_beta, wp, mp, gp, rp, cp)
+    new_col = jnp.max(cpart, axis=1, keepdims=True)
+    return w2[:, :M, :N], m2[:, :M, :N], nrow[:, :M], new_col[:, :, :N]

@@ -1,0 +1,125 @@
+"""Per-(shape, dtype) tile selection for the SM3 Pallas kernels.
+
+The kernels are memory-bound streaming loops, so the block size only has to
+(a) fit the resident streams in VMEM with room for double buffering and
+(b) not pad the matrix into wasted traffic. ``choose_tiles`` encodes that as
+a deterministic heuristic keyed on a VMEM budget; measured winners from
+``benchmarks/autotune.py`` override it through a small JSON registry
+(``autotune_registry.json`` next to this module, or the file named by
+``REPRO_SM3_TUNE_REGISTRY``) so a sweep on real hardware sticks.
+
+Registry entries map ``"<kind>:<M>x<N>:<dtype>" -> [bm, bn]`` where kind is
+one of 'precond', 'fused', 'fused_nomom', 'stacked', 'stacked_nomom', 'vec',
+'vec_nomom' (the stacked kinds key on the per-leaf (M, N), not K: the block
+walks one leaf at a time, so the right tile is K-independent).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Half of the ~16 MiB/core VMEM: leaves headroom for the scalar operand,
+# row/col accumulator tiles, and the compiler's own scratch.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+# bm×bn tiles resident per grid step (inputs + outputs the pipeline keeps
+# in VMEM); ×2 for double buffering happens in the byte model below.
+KIND_STREAMS = {
+    'precond': 2,        # g in, u out
+    'fused': 5,          # w, m, g in; w', m' out
+    'fused_nomom': 3,    # w, g in; w' out
+    'stacked': 5,
+    'stacked_nomom': 3,
+    'vec': 7,            # w, m, g, acc in; w', m', acc' out
+    'vec_nomom': 5,
+}
+
+_BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
+_BN_CANDIDATES = (128, 256, 512, 1024)
+
+_REGISTRY_ENV = 'REPRO_SM3_TUNE_REGISTRY'
+_BUDGET_ENV = 'REPRO_SM3_VMEM_BUDGET'
+
+
+def registry_path() -> str:
+    return os.environ.get(
+        _REGISTRY_ENV,
+        os.path.join(os.path.dirname(__file__), 'autotune_registry.json'))
+
+
+@functools.lru_cache(maxsize=None)
+def _load_registry(path: str) -> Dict[str, Tuple[int, int]]:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return {k: (int(v[0]), int(v[1])) for k, v in raw.items()
+            if isinstance(v, (list, tuple)) and len(v) == 2}
+
+
+def refresh_registry() -> None:
+    """Drop the cached registry (after a sweep rewrites the file)."""
+    _load_registry.cache_clear()
+
+
+def registry_key(kind: str, m: int, n: int, dtype) -> str:
+    return f'{kind}:{m}x{n}:{jnp.dtype(dtype).name}'
+
+
+def _round_up(x: int, k: int) -> int:
+    return -(-x // k) * k
+
+
+def choose_tiles(m: int, n: int, *, dtype=jnp.float32, kind: str = 'fused',
+                 vmem_budget: Optional[int] = None,
+                 use_registry: bool = True) -> Tuple[int, int]:
+    """(bm, bn) for an M×N stream of the given kernel kind.
+
+    Registry first; otherwise: candidate tiles are clamped to the (8, 128)-
+    aligned matrix bounds, filtered by the double-buffered VMEM byte model,
+    then the least-padding candidates win with ties broken toward the
+    largest (widest) tile — wide tiles mean fewer column revisits of the
+    row-accumulator block and a smaller col-partial array.
+    """
+    if use_registry:
+        hit = _load_registry(registry_path()).get(
+            registry_key(kind, m, n, dtype))
+        if hit is not None:
+            return hit
+    budget = vmem_budget if vmem_budget is not None else int(
+        os.environ.get(_BUDGET_ENV, DEFAULT_VMEM_BUDGET))
+    itemsize = max(jnp.dtype(dtype).itemsize, 4)  # ν/compute carried in f32
+    streams = KIND_STREAMS.get(kind, 5)
+
+    cands = {(min(bm, _round_up(m, 8)), min(bn, _round_up(n, 128)))
+             for bm in _BM_CANDIDATES for bn in _BN_CANDIDATES}
+
+    def tile_bytes(c):
+        return 2 * streams * c[0] * c[1] * itemsize  # ×2: double buffering
+
+    feasible = [c for c in cands if tile_bytes(c) <= budget]
+    if not feasible:  # degenerate budget — take the smallest tile and go
+        feasible = [min(cands, key=tile_bytes)]
+
+    def padded(c):
+        return _round_up(m, c[0]) * _round_up(n, c[1])
+
+    least = min(padded(c) for c in feasible)
+    tight = [c for c in feasible if padded(c) == least]
+    return max(tight, key=lambda c: (c[0] * c[1], c[1]))
+
+
+def resolve(m: int, n: int, dtype, kind: str,
+            bm: Optional[int], bn: Optional[int]) -> Tuple[int, int]:
+    """Fill in unset block dims from the registry/heuristic; explicit
+    caller-passed values always win."""
+    if bm is not None and bn is not None:
+        return bm, bn
+    cbm, cbn = choose_tiles(m, n, dtype=dtype, kind=kind)
+    return (bm if bm is not None else cbm,
+            bn if bn is not None else cbn)

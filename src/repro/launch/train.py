@@ -33,7 +33,13 @@ def _parse():
     ap.add_argument('--ckpt-every', type=int, default=0)
     ap.add_argument('--fused', action='store_true',
                     help='fused SM3-II execution mode: weight + momentum + '
-                         'accumulator update in one Pallas kernel per param')
+                         'accumulator update in one Pallas kernel launch '
+                         'per shape bucket (stacked), state updated in '
+                         'place via buffer donation')
+    ap.add_argument('--fused-per-leaf', action='store_true',
+                    help='with --fused: per-leaf kernel dispatch (one '
+                         'launch per rank>=2 param) instead of stacked '
+                         'shape buckets — for comparison runs')
     ap.add_argument('--compression', default='',
                     choices=['', 'int8'])
     ap.add_argument('--log-every', type=int, default=10)
@@ -65,6 +71,8 @@ def main():
         if args.optimizer not in ('sm3', 'sm3-ii'):
             raise SystemExit('--fused is only supported with --optimizer sm3')
         extra['fused'] = True
+        if args.fused_per_leaf:
+            extra['stacked'] = False
     opt = make_optimizer(
         OptimizerSpec(name=args.optimizer, learning_rate=args.lr,
                       extra=extra),

@@ -158,13 +158,28 @@ def train_loop(cfg: ModelConfig, optimizer, dataset, steps: int,
                log_every: int = 10, checkpoint_mgr=None,
                checkpoint_every: int = 0, state: Optional[TrainState] = None,
                callback: Optional[Callable[[int, Dict], None]] = None,
-               remat: bool = True) -> Tuple[TrainState, list]:
+               remat: bool = True,
+               donate: bool = True) -> Tuple[TrainState, list]:
     """Single-host training loop (examples/benchmarks; the production entry
-    point is repro.launch.train which adds the mesh + pjit)."""
+    point is repro.launch.train which adds the mesh + pjit).
+
+    ``donate=True`` donates the train state into each step so XLA reuses
+    its buffers for the outputs (with the fused SM3 kernels' in-place
+    aliasing this removes the transient second copy of params + momentum +
+    accumulators). The caller's ``state`` object stays valid: its buffers
+    are copied once before the loop, and only the loop-internal copies are
+    consumed."""
     step_fn = jax.jit(make_train_step(cfg, optimizer,
-                                      microbatches=microbatches, remat=remat))
+                                      microbatches=microbatches, remat=remat),
+                      donate_argnums=(0,) if donate else ())
     if state is None:
         state = init_state(jax.random.PRNGKey(seed), cfg, optimizer)
+    elif donate:
+        # defensive one-time copy: donation deletes the argument's buffers,
+        # and callers (checkpoint/resume tests, examples) may reuse the
+        # state object they passed in
+        state = jax.tree.map(
+            lambda x: jnp.array(x) if hasattr(x, 'dtype') else x, state)
     start = int(state.step)
     history = []
     t0 = time.perf_counter()

@@ -1,0 +1,332 @@
+"""The stacked fused-SM3 execution path: shape-bucketed single-launch
+kernels, in-place (donated/aliased) state, launch-count guarantees, the
+momentum-free (β1 == 0) kernels, the interpret-mode env override, and the
+tile chooser + autotune registry.
+
+Parity here is asserted *bit-exact for f32* between the stacked path and
+the unfused chain when both run under jit — the kernels mirror the chain's
+per-stage rounding exactly, and jit compiles both sides with the same FMA
+contraction. (Eager-vs-jit comparisons differ by 1-2 ulp; the looser
+eager-side tolerances live in test_fused_mode.py.)
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import base
+from repro.core.sm3 import sm3
+from repro.kernels.sm3 import ops, tuning
+
+ATOL_BF16 = 1e-2
+
+
+def _mixed_params():
+    """Every dispatch class at once, with *repeated* shapes (the bucketing
+    win), distinct shapes, bf16 + f32 leaves, rank-3, rank-1/0, and the
+    degenerate trailing-dim fallback."""
+    k = jax.random.PRNGKey(0)
+    def rnd(i, shape, dtype=jnp.float32):
+        return jax.random.normal(jax.random.fold_in(k, i), shape, dtype)
+    return {
+        'layer0': {'w': rnd(0, (48, 40)), 'b': rnd(1, (40,))},
+        'layer1': {'w': rnd(2, (48, 40)), 'b': rnd(3, (40,))},
+        'layer2': {'w': rnd(4, (48, 40)), 'b': rnd(5, (40,))},
+        'emb': rnd(6, (64, 24)),
+        'w3d': rnd(7, (3, 20, 36)),
+        'wbf1': rnd(8, (33, 40), jnp.bfloat16),
+        'wbf2': rnd(9, (33, 40), jnp.bfloat16),
+        'deg': rnd(10, (13, 1)),
+        'scale': jnp.asarray(0.5),
+    }
+
+
+def _grads_like(params, seed, t):
+    leaves, treedef = jax.tree.flatten(params)
+    return treedef.unflatten([
+        jax.random.normal(jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), t), i), p.shape, p.dtype)
+        for i, p in enumerate(leaves)])
+
+
+def _run(tx, params, steps, *, fused, jit=True, donate=False, seed=17):
+    if fused:
+        fn = tx.fused_update
+        if jit:
+            fn = jax.jit(fn, donate_argnums=(1, 2) if donate else ())
+    else:
+        def fn(g, s, p):
+            upd, s2 = tx.update(g, s, p)
+            return base.apply_updates(p, upd), s2
+        if jit:
+            fn = jax.jit(fn)
+    s, p = tx.init(params), params
+    for t in range(steps):
+        p, s = fn(_grads_like(params, seed, t), s, p)
+    return p, s
+
+
+def _assert_tree_allclose(a, b, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   atol=atol, rtol=atol)
+
+
+def _assert_parity(pa, sa, pb, sb, params, f32_atol=0.0):
+    """f32 leaves bit-exact (or within f32_atol); bf16 leaves within
+    kernel tolerance."""
+    fa, treedef = jax.tree.flatten(pa)
+    fb = treedef.flatten_up_to(pb)
+    for x, y, p in zip(fa, fb, treedef.flatten_up_to(params)):
+        if p.dtype == jnp.bfloat16:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       atol=ATOL_BF16, rtol=ATOL_BF16)
+        elif f32_atol == 0.0:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=f32_atol, rtol=f32_atol)
+    _assert_tree_allclose(sa, sb, ATOL_BF16)
+
+
+@pytest.mark.parametrize('beta1', [0.9, 0.0])
+def test_stacked_vs_per_leaf_vs_unfused(beta1):
+    """Three-way parity on the mixed tree over ≥10 steps: stacked buckets
+    == per-leaf fused == unfused chain (f32 bit-exact under jit)."""
+    params = _mixed_params()
+    kw = dict(beta1=beta1)
+    pu, su = _run(sm3(0.1, **kw), params, 10, fused=False)
+    pf, sf = _run(sm3(0.1, fused=True, **kw), params, 10, fused=True)
+    pl, sl = _run(sm3(0.1, fused=True, stacked=False, **kw), params, 10,
+                  fused=True)
+    _assert_parity(pu, su, pf, sf, params)
+    _assert_parity(pu, su, pl, sl, params)
+
+
+def test_stacked_with_clip_and_weight_decay():
+    # not bit-exact: the global-norm clip scale is reduced inside two
+    # different jitted programs, whose fusion may contract the sum-of-
+    # squares differently — the scale itself can land 1 ulp apart
+    params = _mixed_params()
+    kw = dict(beta1=0.9, clip_norm=0.5, weight_decay=0.01)
+    pu, su = _run(sm3(0.1, **kw), params, 10, fused=False)
+    pf, sf = _run(sm3(0.1, fused=True, **kw), params, 10, fused=True)
+    _assert_parity(pu, su, pf, sf, params, f32_atol=1e-5)
+
+
+def test_launch_count_is_o_distinct_shapes():
+    """The acceptance criterion: a mixed-shape tree issues one launch per
+    distinct (merged-2-D shape, dtype) bucket plus one per rank≤1 dtype
+    bucket — not one per leaf."""
+    params = _mixed_params()
+    # distinct rank≥2 buckets: (48,40,f32)×3, (64,24,f32), (60,36,f32 — the
+    # merged rank-3), (33,40,bf16)×2 → 4 buckets; rank≤1: f32 → 1 bucket
+    tx = sm3(0.1, fused=True)
+    state = tx.init(params)
+    g = _grads_like(params, 3, 0)
+    ops.reset_launch_count()
+    jax.eval_shape(tx.fused_update, g, state, params)
+    counts = ops.launch_counts()
+    assert counts.get('stacked') == 4
+    assert counts.get('vec') == 1
+    assert ops.launch_count() == 5
+    # per-leaf dispatch: one launch per rank≥2 non-degenerate leaf (7)
+    tx_pl = sm3(0.1, fused=True, stacked=False)
+    ops.reset_launch_count()
+    jax.eval_shape(tx_pl.fused_update, g, tx_pl.init(params), params)
+    assert ops.launch_counts().get('fused') == 7
+    assert ops.launch_count() == 8
+
+
+def test_launch_count_scales_with_shapes_not_leaves():
+    """Growing the tree with more same-shape leaves must not grow the
+    launch count."""
+    def tree(n):
+        return {f'w{i}': jnp.ones((16, 24)) for i in range(n)}
+    tx = sm3(0.1, fused=True)
+    counts = []
+    for n in (2, 8):
+        params = tree(n)
+        ops.reset_launch_count()
+        jax.eval_shape(tx.fused_update, _grads_like(params, 1, 0),
+                       tx.init(params), params)
+        counts.append(ops.launch_count())
+    assert counts[0] == counts[1] == 1
+
+
+@pytest.mark.parametrize('beta1', [0.9, 0.0])
+def test_donation_in_place_multi_step(beta1):
+    """jit with donated state+params over ≥10 steps: donation must engage
+    (old buffers deleted) without corrupting results vs the undonated
+    run."""
+    params = _mixed_params()
+    tx = sm3(0.1, beta1=beta1, fused=True)
+    p_ref, s_ref = _run(tx, params, 12, fused=True, donate=False)
+    fn = jax.jit(tx.fused_update, donate_argnums=(1, 2))
+    s, p = tx.init(params), params
+    for t in range(12):
+        prev = p
+        p, s = fn(_grads_like(params, 17, t), s, p)
+        if t == 0:
+            # donation actually engaged: the old param buffers are gone
+            assert all(x.is_deleted() for x in jax.tree.leaves(prev))
+    _assert_parity(p_ref, s_ref, p, s, params)
+
+
+def test_trainer_loop_donates_and_preserves_caller_state():
+    """train_loop(donate=True) (the default) must leave the caller's state
+    object usable and reproduce the undonated loss curve."""
+    from repro.configs import get_config
+    from repro.core import make_optimizer
+    from repro.core.base import OptimizerSpec
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.train import trainer
+
+    cfg, _ = get_config('transformer-big')
+    cfg = cfg.reduced(d_model=32, d_ff=64, n_repeats=1, vocab=128, seq=16)
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4))
+    opt = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.2,
+                                       extra={'fused': True}))
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt)
+    _, h_donated = trainer.train_loop(cfg, opt, ds, steps=3, state=state,
+                                      log_every=1)
+    # caller's state survived the donation and a re-run reproduces exactly
+    assert not any(x.is_deleted() for x in jax.tree.leaves(state.params))
+    _, h_plain = trainer.train_loop(cfg, opt, ds, steps=3, state=state,
+                                    log_every=1, donate=False)
+    np.testing.assert_allclose([h['loss'] for h in h_donated],
+                               [h['loss'] for h in h_plain], rtol=1e-6)
+
+
+def test_momentum_free_streams_no_momentum():
+    """β1 == 0 must route to the momentum-free kernels (no m streams) in
+    both stacked and vec paths."""
+    params = {'w1': jnp.ones((16, 24)), 'w2': jnp.ones((16, 24)),
+              'b': jnp.ones((7,))}
+    tx = sm3(0.1, beta1=0.0, fused=True)
+    ops.reset_launch_count()
+    jax.eval_shape(tx.fused_update, _grads_like(params, 2, 0),
+                   tx.init(params), params)
+    counts = ops.launch_counts()
+    assert counts.get('stacked_nomom') == 1
+    assert counts.get('vec_nomom') == 1
+    assert 'stacked' not in counts and 'vec' not in counts
+
+
+# -- kernel-level: stacked vs per-leaf oracle --------------------------------
+
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+def test_stacked_kernel_matches_per_leaf(dtype):
+    """The (K, M, N) stacked kernel == K independent 2-D kernel calls."""
+    K, M, N = 3, 100, 130
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    w = jax.random.normal(ks[0], (K, M, N), dtype)
+    m = jax.random.normal(ks[1], (K, M, N), dtype) * 0.1
+    g = jax.random.normal(ks[2], (K, M, N), dtype)
+    row = jnp.abs(jax.random.normal(ks[3], (K, M, 1), jnp.float32))
+    col = jnp.abs(jax.random.normal(ks[4], (K, 1, N), jnp.float32))
+    w2, m2, r2, c2 = ops.sm3_ii_fused_stacked_step(
+        w, m, g, row, col, 0.2, 0.9, wd=0.01, gscale=0.7, bm=64, bn=128)
+    for k in range(K):
+        wk, mk, rk, ck = ops.sm3_ii_fused_step(
+            w[k], m[k], g[k], row[k], col[k], 0.2, 0.9, wd=0.01, gscale=0.7,
+            bm=64, bn=128)
+        np.testing.assert_array_equal(np.asarray(w2[k]), np.asarray(wk))
+        np.testing.assert_array_equal(np.asarray(m2[k]), np.asarray(mk))
+        np.testing.assert_array_equal(np.asarray(r2[k]), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(c2[k]), np.asarray(ck))
+
+
+def test_stacked_nomom_kernel_matches_per_leaf():
+    K, M, N = 2, 48, 40
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 4)
+    w = jax.random.normal(ks[0], (K, M, N))
+    g = jax.random.normal(ks[1], (K, M, N))
+    row = jnp.abs(jax.random.normal(ks[2], (K, M, 1), jnp.float32))
+    col = jnp.abs(jax.random.normal(ks[3], (K, 1, N), jnp.float32))
+    w2, r2, c2 = ops.sm3_ii_fused_stacked_step(
+        w, None, g, row, col, 0.2, 0.0, bm=16, bn=128)
+    for k in range(K):
+        wk, rk, ck = ops.sm3_ii_fused_step(
+            w[k], None, g[k], row[k], col[k], 0.2, 0.0, bm=16, bn=128)
+        np.testing.assert_array_equal(np.asarray(w2[k]), np.asarray(wk))
+        np.testing.assert_array_equal(np.asarray(r2[k]), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(c2[k]), np.asarray(ck))
+
+
+# -- interpret-mode env override --------------------------------------------
+
+def test_interpret_env_override(monkeypatch):
+    monkeypatch.setenv('REPRO_PALLAS_INTERPRET', '1')
+    assert ops._interpret() is True
+    monkeypatch.setenv('REPRO_PALLAS_INTERPRET', 'false')
+    assert ops._interpret() is False
+    monkeypatch.setenv('REPRO_PALLAS_INTERPRET', 'bogus')
+    with pytest.raises(ValueError):
+        ops._interpret()
+    monkeypatch.delenv('REPRO_PALLAS_INTERPRET')
+    assert ops._interpret() == (jax.default_backend() != 'tpu')
+
+
+# -- tile chooser + registry -------------------------------------------------
+
+def test_choose_tiles_respects_budget_and_alignment():
+    for kind in ('fused', 'fused_nomom', 'stacked', 'vec'):
+        bm, bn = tuning.choose_tiles(1024, 1024, kind=kind,
+                                     use_registry=False)
+        assert bm % 8 == 0 and bn % 128 == 0
+        streams = tuning.KIND_STREAMS[kind]
+        assert 2 * streams * bm * bn * 4 <= tuning.DEFAULT_VMEM_BUDGET
+    # momentum-free fits bigger tiles than the 5-stream momentum kernel
+    area = lambda t: t[0] * t[1]
+    assert area(tuning.choose_tiles(4096, 4096, kind='fused_nomom',
+                                    use_registry=False)) >= \
+        area(tuning.choose_tiles(4096, 4096, kind='fused',
+                                 use_registry=False))
+
+
+def test_choose_tiles_clamps_to_matrix():
+    bm, bn = tuning.choose_tiles(16, 200, use_registry=False)
+    assert bm <= 16 and bn <= 256  # round_up(200, 128) == 256
+    # degenerate budget still returns a usable tile
+    bm, bn = tuning.choose_tiles(1024, 1024, vmem_budget=1,
+                                 use_registry=False)
+    assert bm >= 8 and bn >= 128
+
+
+def test_choose_tiles_deterministic():
+    a = tuning.choose_tiles(300, 257, use_registry=False)
+    b = tuning.choose_tiles(300, 257, use_registry=False)
+    assert a == b
+
+
+def test_registry_overrides_heuristic(tmp_path, monkeypatch):
+    key = tuning.registry_key('fused', 640, 640, jnp.float32)
+    reg = tmp_path / 'reg.json'
+    reg.write_text(json.dumps({key: [64, 128]}))
+    monkeypatch.setenv('REPRO_SM3_TUNE_REGISTRY', str(reg))
+    tuning.refresh_registry()
+    try:
+        assert tuning.choose_tiles(640, 640, kind='fused') == (64, 128)
+        # other shapes fall through to the heuristic
+        assert tuning.choose_tiles(641, 640, kind='fused') != (64, 128)
+    finally:
+        monkeypatch.delenv('REPRO_SM3_TUNE_REGISTRY')
+        tuning.refresh_registry()
+
+
+def test_in_tree_registry_is_valid_json():
+    path = os.path.join(os.path.dirname(tuning.__file__),
+                        'autotune_registry.json')
+    with open(path) as f:
+        reg = json.load(f)
+    assert isinstance(reg, dict)
+    for k, v in reg.items():
+        assert len(v) == 2 and all(isinstance(x, int) for x in v), k
