@@ -1,0 +1,122 @@
+"""Cover sweep: memory ratio / step time / launch counts per cover choice.
+
+The paper's memory claim is parameterized by the cover (§3): co-dim-1 is
+one point on a spectrum from full Adagrad accumulators (max memory, tightest
+ν) to coarse blocked slabs (min memory, loosest ν). This sweep runs the same
+small LM update under each shipped cover policy and reports, per cover:
+
+  acc_bytes            analytic SM3 accumulator bytes (cover-aware
+                       core.memory accounting)
+  measured_bytes       materialized accumulator bytes (must agree — the
+                       analytic path is what the full-size configs use)
+  mem_ratio            param bytes / accumulator bytes (the paper's Θ(Π)/Θ(Σ)
+                       factor, per cover)
+  update_apply_us      one fused update+apply (CPU interpret mode —
+                       correctness wiring, directional only)
+  launches             Pallas kernel launches per step (the stacked-bucket
+                       collapse must survive non-default covers)
+
+``--smoke`` shrinks the model and timing iterations for CI wiring checks.
+A JSON copy lands in $BENCH_OUT (default experiments/bench) as
+``covers.json`` for BENCH_* tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_csv, emit_json, small_lm, time_fn
+from repro.core import base as opt_base
+from repro.core import covers as covers_lib
+from repro.core import make_optimizer, memory
+from repro.core.base import OptimizerSpec
+from repro.core.sm3 import SM3State
+from repro.kernels.sm3 import ops as sm3_ops
+from repro.models import lm
+
+HEADER = ['cover', 'acc_bytes', 'measured_bytes', 'mem_ratio',
+          'update_apply_us', 'launches']
+
+# cover -> OptimizerSpec.extra cover configuration. 'grouped' folds the
+# (d_model, d_ff)-ish trailing axes of the stacked rank-3 block params into
+# one accumulator axis (finer than co-dim-1: more bytes, tighter ν);
+# everything else keeps the co-dim-1 default there.
+SWEEP = [
+    ('codim1', {}),
+    ('full', {'default_cover': 'full'}),
+    ('blocked:4', {'default_cover': 'blocked:4'}),
+    ('blocked:32', {'default_cover': 'blocked:32'}),
+    ('grouped-qkv', {'cover_rules': [
+        (r'attn/w[qkvo]|mlp/w_', 'grouped:0|1,2')]}),
+]
+
+
+def run(smoke: bool = False):
+    cfg = small_lm(d_model=128, d_ff=512, n_repeats=2, vocab=1024, seq=32) \
+        if smoke else \
+        small_lm(d_model=256, d_ff=1024, n_repeats=2, vocab=2048, seq=64)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape, p.dtype),
+        params)
+    p_bytes = opt_base.tree_bytes(params)
+    iters = 2 if smoke else 8
+
+    rows = []
+    for name, cover_extra in SWEEP:
+        spec = OptimizerSpec(name='sm3', learning_rate=0.1,
+                             extra={'warmup_steps': 10, 'fused': True,
+                                    **cover_extra})
+        opt = make_optimizer(spec, d_model=cfg.d_model)
+        policy = covers_lib.CoverPolicy(
+            rules=tuple((p, covers_lib.as_cover(c))
+                        for p, c in cover_extra.get('cover_rules', ())),
+            default=covers_lib.as_cover(cover_extra.get('default_cover')))
+        acc_bytes = memory.optimizer_state_bytes(
+            'sm3', params, beta1=0.0, cover_policy=policy)
+
+        state = opt.init(params)
+        sm3_state = next(s for s in state if isinstance(s, SM3State))
+        measured = opt_base.tree_bytes(sm3_state.mu)
+
+        step = jax.jit(lambda g, s, p, _o=opt: opt_base.apply_gradients(
+            _o, g, s, p))
+        us = time_fn(step, grads, state, params, warmup=1, iters=iters)
+
+        sm3_ops.reset_launch_count()
+        jax.eval_shape(opt.fused_update, grads, state, params)
+        launches = sm3_ops.launch_count()
+
+        rows.append({'cover': name,
+                     'acc_bytes': acc_bytes,
+                     'measured_bytes': measured,
+                     'mem_ratio': round(p_bytes / max(acc_bytes, 1), 2),
+                     'update_apply_us': round(us),
+                     'launches': launches})
+        assert acc_bytes == measured, (name, acc_bytes, measured)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='small model + minimal timing iterations (CI '
+                         'wiring check)')
+    args = ap.parse_args(argv or [])
+    rows = run(smoke=args.smoke)
+    emit_csv(rows, HEADER)
+    emit_json('covers', rows, meta={'smoke': bool(args.smoke)})
+    by = {r['cover']: r for r in rows}
+    print(f"# memory ratio codim1 {by['codim1']['mem_ratio']} vs "
+          f"blocked:32 {by['blocked:32']['mem_ratio']} vs "
+          f"full {by['full']['mem_ratio']} (coarser cover => smaller state)")
+    print(f"# launches per step: " +
+          ', '.join(f"{r['cover']}={r['launches']}" for r in rows) +
+          " (stacked bucketing holds across covers)")
+
+
+if __name__ == '__main__':
+    main(sys.argv[1:])

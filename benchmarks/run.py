@@ -6,6 +6,7 @@
   fig3_batch_scaling Fig. 3 — steps-to-quality vs batch (SM3)
   fig5_accumulators Fig. 5  — accumulator tightness γ vs ν vs ν'
   step_time         §5 wall-time claim — per-step/update timings
+  covers            §3 cover spectrum — memory/step-time/launches per cover
   roofline          §Roofline — reads experiments/dryrun/*.json
   autotune          SM3 kernel tile sweep (explicit only — writes the
                     tile registry with --write; not part of the default
@@ -16,9 +17,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (autotune, fig2_convergence, fig3_batch_scaling,
-                            fig5_accumulators, roofline, step_time,
-                            table1_memory, table2_memory)
+    from benchmarks import (autotune, covers, fig2_convergence,
+                            fig3_batch_scaling, fig5_accumulators, roofline,
+                            step_time, table1_memory, table2_memory)
     mods = {
         'table1_memory': table1_memory,
         'table2_memory': table2_memory,
@@ -26,6 +27,7 @@ def main() -> None:
         'fig3_batch_scaling': fig3_batch_scaling,
         'fig5_accumulators': fig5_accumulators,
         'step_time': step_time,
+        'covers': covers,
         'roofline': roofline,
         'autotune': autotune,
     }

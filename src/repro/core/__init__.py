@@ -3,12 +3,16 @@ from repro.core import base, baselines, compression, covers, memory, schedules, 
 from repro.core.base import (GradientTransformation, apply_updates, chain,
                              global_norm, tree_bytes)
 from repro.core.baselines import adafactor, adagrad, adam, sgd
+from repro.core.covers import (BlockedCover, Codim1Cover, Cover, CoverPolicy,
+                               FullCover, GeneralCover, GroupedAxesCover)
 from repro.core.registry import make_optimizer
-from repro.core.sm3 import scale_by_sm3, sm3 as sm3_optimizer
+from repro.core.sm3 import SM3Config, scale_by_sm3, sm3 as sm3_optimizer
 
 __all__ = [
     'base', 'baselines', 'compression', 'covers', 'memory', 'schedules', 'sm3',
     'GradientTransformation', 'apply_updates', 'chain', 'global_norm',
     'tree_bytes', 'adafactor', 'adagrad', 'adam', 'sgd', 'make_optimizer',
-    'scale_by_sm3', 'sm3_optimizer',
+    'scale_by_sm3', 'sm3_optimizer', 'SM3Config',
+    'Cover', 'CoverPolicy', 'Codim1Cover', 'FullCover', 'BlockedCover',
+    'GroupedAxesCover', 'GeneralCover',
 ]

@@ -79,7 +79,26 @@ def identity() -> GradientTransformation:
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
-    """Compose transformations left-to-right (first applied first)."""
+    """Compose transformations left-to-right (first applied first).
+
+    A FusedGradientTransformation may only appear as the *sole* member — it
+    is returned unchanged, keeping its fused path. Composing one with other
+    transforms would silently drop ``fused_update`` (the chained ``update``
+    runs the slow reference path and the extra stages would double-apply on
+    top of the fused step), so that is an error.
+    """
+    fused = [t for t in transforms
+             if getattr(t, 'fused_update', None) is not None]
+    if fused:
+        if len(transforms) == 1:
+            return transforms[0]
+        raise ValueError(
+            'base.chain cannot compose a FusedGradientTransformation with '
+            'other transforms: the fused_update path (which already applies '
+            'the whole update pipeline) would be silently dropped. Fold the '
+            'extra stages into the fused optimizer config (e.g. '
+            'sm3(..., clip_norm=..., weight_decay=...)) or chain unfused '
+            'transformations.')
 
     def init_fn(params):
         return tuple(t.init(params) for t in transforms)

@@ -1,31 +1,68 @@
-"""Cover abstractions for SM3 (paper §3-4).
+"""First-class cover API for SM3 (paper §3-4).
 
-SM3 is defined over an arbitrary cover {S_r} of the parameter indices. Two
-implementations live here:
+SM3 is defined over an *arbitrary* cover {S_r} of the parameter indices
+(§3); co-dimension-1 slices (§4) are just the practical default. This module
+is the API home for covers:
 
-* ``codim1_cover_shapes``: the practical cover from §4 — for a tensor of shape
-  (n_1, ..., n_p) the cover is all co-dimension-1 slices; accumulator r (one
-  per axis) is stored as a broadcast-ready tensor with shape n_r on axis r and
-  1 elsewhere, e.g. a (m, n) matrix gets a (m, 1) row accumulator and a
-  (1, n) column accumulator. Memory: Θ(Σ n_i) vs Θ(Π n_i).
+* ``Cover`` — the per-leaf protocol. A cover defines the SM3 semantics for
+  one parameter tensor through ``acc_shapes`` (accumulator storage),
+  ``nu_from_mu`` (ν(i) = min over covering accumulators) and
+  ``fold_nu_to_mu`` (μ'_r = max over S_r of ν), plus *execution plans*
+  (``merged_2d_plan`` / ``vec_plan``) that describe how the fused Pallas
+  kernels can serve it. A cover with no plan still trains — the optimizer
+  falls back to the exact jnp reference for that leaf.
 
-* ``GeneralCover``: the abstract index-set form from §3, for arbitrary
-  (possibly overlapping) covers over a flat parameter vector. Used by tests to
-  validate the fast tensor path against the paper's pseudocode, and available
-  for custom covers (e.g. embedding-table rows only).
+* Concrete covers:
+    - ``Codim1Cover``    — the paper §4 default (one accumulator per axis,
+      Θ(Σ n_i) memory); bit-identical to the pre-API implementation.
+    - ``FullCover``      — singleton sets {i}: a full per-element
+      accumulator, degenerate cover ≡ Adagrad per leaf.
+    - ``BlockedCover``   — co-dim-1 slabs of thickness b per axis (paper §3
+      arbitrary covers): accumulator r of axis a covers b consecutive
+      slices, Θ(Σ ⌈n_i/b_i⌉) memory. Coarser than co-dim-1 → smaller state,
+      pointwise-larger ν.
+    - ``GroupedAxesCover`` — merge adjacent axes into one accumulator axis
+      (e.g. fold (heads, head_dim) into a single Θ(h·hd) accumulator):
+      finer than co-dim-1 → more state, pointwise-smaller ν (tighter
+      preconditioner).
 
-Rank-0/1 parameters keep a full (Adagrad) accumulator — matching the released
-SM3 implementation; these are O(d_model) and negligible.
+* ``CoverPolicy`` — path-regex rules → cover per leaf (mirroring the
+  sharding-rules style), so e.g. embedding tables can use a different cover
+  than attention projections.
+
+* ``GeneralCover`` — the abstract index-set form from §3 over a flat
+  vector, used by tests to validate every tensor cover against the paper's
+  pseudocode (``from_blocks`` / ``from_tensor_cover`` build the matching
+  index sets).
+
+Invariant used throughout: SM3 statistics are nonnegative (μ starts at 0,
+ν = min μ + g², μ' = max ν), so zero padding is inert under max-reductions.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import dataclasses
+import re
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+Shape = Tuple[int, ...]
+MuTuple = Tuple[jnp.ndarray, ...]
 
-def codim1_cover_shapes(shape: Sequence[int]) -> List[Tuple[int, ...]]:
+
+def _nelems(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _ceil_div(n: int, b: int) -> int:
+    return -(-int(n) // int(b))
+
+
+def codim1_cover_shapes(shape: Sequence[int]) -> List[Shape]:
     """Accumulator shapes for the co-dim-1 cover of a tensor ``shape``.
 
     rank >= 2: one accumulator per axis, broadcastable against the tensor.
@@ -41,28 +78,562 @@ def codim1_cover_shapes(shape: Sequence[int]) -> List[Tuple[int, ...]]:
     return out
 
 
-def cover_memory_ratio(shape: Sequence[int]) -> float:
-    """Θ(Π n_i) / Θ(Σ acc sizes): the paper's memory-saving factor."""
-    shape = tuple(int(s) for s in shape)
-    full = float(np.prod(shape)) if shape else 1.0
-    accs = sum(float(np.prod(s)) if s else 1.0 for s in codim1_cover_shapes(shape))
-    return full / max(accs, 1.0)
+# ---------------------------------------------------------------------------
+# execution plans: how the fused Pallas kernels serve a cover
+# ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class Merged2DPlan:
+    """Static recipe for running one leaf through the merged-2-D kernels.
+
+    The fused matrix kernels compute ν = min(row, col) + g² over an (M, N)
+    view and emit per-row / per-column maxima of ν. Any cover splitting into
+    a *trailing* accumulator (contiguous over the merged last axis) plus
+    leading accumulators can be served exactly:
+
+      ``rows``/``cols``  — the merged (M, N) view; the stacked-launch
+                           bucketing key (covers sharing (M, N) share one
+                           (K, M, N) kernel launch).
+      ``row_in(mu)``     — (M, 1): broadcast-min of all leading
+                           accumulators, expanded per merged row. min(row,
+                           col) in the kernel then equals the full
+                           min-over-covering-sets.
+      ``col_in(mu)``     — (1, N): the trailing accumulator expanded per
+                           merged column.
+      ``fold_out(row', col', mu)`` — recover the cover's accumulators from
+                           the kernel's per-row/per-column ν maxima (exact:
+                           max is associative).
+    """
+    rows: int
+    cols: int
+    row_in: Callable[[MuTuple], jnp.ndarray]
+    col_in: Callable[[MuTuple], jnp.ndarray]
+    fold_out: Callable[[jnp.ndarray, jnp.ndarray, MuTuple], MuTuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class VecPlan:
+    """Recipe for running one leaf through the bucketed elementwise kernel.
+
+    The vec kernel computes ν = acc + g² per element — exact for any
+    *partition* cover (each index in exactly one set): ``expand(mu)``
+    replicates the accumulator to one value per element (flat, length ==
+    leaf size), and ``fold(acc')`` max-reduces the kernel's per-element ν
+    back to the stored accumulator (max over each set — exact, since the
+    per-set accumulator value is constant across the set's elements).
+    """
+    expand: Callable[[MuTuple], jnp.ndarray]
+    fold: Callable[[jnp.ndarray], MuTuple]
+
+
+# ---------------------------------------------------------------------------
+# the Cover protocol
+# ---------------------------------------------------------------------------
+
+class Cover:
+    """Per-leaf cover {S_r} of a parameter tensor's indices.
+
+    Semantics methods (used by the reference/unfused optimizer):
+      acc_shapes(shape)        -> accumulator storage shapes [per set group]
+      nu_from_mu(mu, shape)    -> ν(i) = min_{r: S_r ∋ i} μ(r), full shape
+      fold_nu_to_mu(nu)        -> (μ'_r = max_{j ∈ S_r} ν(j), ...)
+      expand_acc(r, acc, shape)-> value of accumulator r at every index it
+                                  covers (full shape) — the primitive behind
+                                  nu_from_mu and the GeneralCover builder
+
+    Execution plans (used by the fused mode; None -> exact jnp fallback):
+      merged_2d_plan(shape)    -> Merged2DPlan | None
+      vec_plan(shape)          -> VecPlan | None
+    """
+    kind = 'abstract'
+
+    def acc_shapes(self, shape: Shape) -> List[Shape]:
+        raise NotImplementedError
+
+    def expand_acc(self, r: int, acc: jnp.ndarray, shape: Shape):
+        raise NotImplementedError
+
+    def nu_from_mu(self, mu: MuTuple, shape: Shape) -> jnp.ndarray:
+        nu = self.expand_acc(0, mu[0], shape)
+        for r, acc in enumerate(mu[1:], start=1):
+            nu = jnp.minimum(nu, self.expand_acc(r, acc, shape))
+        return jnp.broadcast_to(nu, shape)
+
+    def fold_nu_to_mu(self, nu: jnp.ndarray) -> MuTuple:
+        raise NotImplementedError
+
+    def merged_2d_plan(self, shape: Shape) -> Optional[Merged2DPlan]:
+        return None
+
+    def vec_plan(self, shape: Shape) -> Optional[VecPlan]:
+        return None
+
+    def state_size(self, shape: Shape) -> int:
+        """Accumulator elements this cover stores for a leaf ``shape``."""
+        return sum(_nelems(s) for s in self.acc_shapes(shape))
+
+
+class _BroadcastCover(Cover):
+    """Covers whose accumulators are broadcast-ready (1s on reduced axes).
+
+    ``nu_from_mu`` chains jnp.minimum without pre-broadcasting — the exact
+    op sequence of the pre-API implementation, kept for bit-identity."""
+
+    def expand_acc(self, r, acc, shape):
+        del r
+        return jnp.broadcast_to(acc, shape)
+
+    def nu_from_mu(self, mu, shape):
+        if len(mu) == 1:
+            return jnp.broadcast_to(mu[0], shape)
+        nu = mu[0]
+        for acc in mu[1:]:
+            nu = jnp.minimum(nu, acc)
+        return jnp.broadcast_to(nu, shape)
+
+
+def _max_over_others(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """max over all axes except ``axis``, keepdims (→ accumulator shape)."""
+    if x.ndim <= 1:
+        return x
+    axes = tuple(a for a in range(x.ndim) if a != axis)
+    return jnp.max(x, axis=axes, keepdims=True)
+
+
+def _lead_min(mu: MuTuple) -> jnp.ndarray:
+    """Broadcast min of all leading (non-last) accumulators, as (R, 1)."""
+    nu = mu[0]
+    for acc in mu[1:-1]:
+        nu = jnp.minimum(nu, acc)
+    return nu.reshape(-1, 1)
+
+
+def _codim1_mu_from_2d(row_new: jnp.ndarray, col_new: jnp.ndarray,
+                       mu: MuTuple, shape: Shape) -> MuTuple:
+    """Recover the p co-dim-1 accumulators from the merged-2-D kernel's
+    row'/col' outputs (max is associative, so this is exact)."""
+    p = len(shape)
+    new_last = col_new.reshape(mu[-1].shape)
+    lead_full = row_new.reshape(shape[:-1] + (1,))
+    if p == 2:
+        return (lead_full, new_last)
+    outs = []
+    for a in range(p - 1):
+        axes = tuple(b for b in range(p - 1) if b != a)
+        outs.append(jnp.max(lead_full, axis=axes, keepdims=True))
+    return tuple(outs) + (new_last,)
+
+
+def _identity_vec_plan(shape: Shape, acc_shape: Shape) -> VecPlan:
+    """Full per-element accumulator: expand/fold are pure reshapes."""
+    return VecPlan(
+        expand=lambda mu: mu[0].reshape(-1),
+        fold=lambda acc: (acc.reshape(acc_shape),))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codim1Cover(_BroadcastCover):
+    """The paper §4 cover: all co-dimension-1 slices (the default).
+
+    rank >= 2 tensors get one accumulator per axis (Θ(Σ n_i)); rank <= 1
+    keep a full accumulator (degenerate cover == Adagrad), matching the
+    released SM3. Bit-identical to the pre-API hardcoded implementation."""
+    kind = 'codim1'
+
+    def acc_shapes(self, shape):
+        return codim1_cover_shapes(shape)
+
+    def fold_nu_to_mu(self, nu):
+        if nu.ndim >= 2:
+            return tuple(_max_over_others(nu, a) for a in range(nu.ndim))
+        return (nu,)
+
+    def merged_2d_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) < 2 or shape[-1] <= 1:
+            return None
+        C = shape[-1]
+        return Merged2DPlan(
+            rows=_nelems(shape) // C, cols=C,
+            row_in=_lead_min,
+            col_in=lambda mu: mu[-1].reshape(1, C),
+            fold_out=lambda row_new, col_new, mu: _codim1_mu_from_2d(
+                row_new, col_new, mu, shape))
+
+    def vec_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) >= 2:
+            return None  # rank>=2 goes through the matrix kernels (or falls
+            # back for degenerate trailing dims, as before)
+        return _identity_vec_plan(shape, shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class FullCover(_BroadcastCover):
+    """Singleton sets {i}: a full-shape accumulator per leaf ≡ Adagrad.
+
+    The finest cover — maximum memory, tightest ν. Every leaf (any rank)
+    is servable by the bucketed elementwise kernel."""
+    kind = 'full'
+
+    def acc_shapes(self, shape):
+        return [tuple(int(s) for s in shape)]
+
+    def fold_nu_to_mu(self, nu):
+        return (nu,)
+
+    def vec_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        return _identity_vec_plan(shape, shape)
+
+
+def _normalize_blocks(block_sizes, rank: int) -> Shape:
+    """Per-axis block sizes; ints broadcast, tuples right-align (leading
+    axes pad with 1 == exact co-dim-1; extra leading entries are dropped
+    for lower-rank leaves, so one spec can serve a mixed-rank tree)."""
+    if isinstance(block_sizes, int):
+        bs = (rank and (block_sizes,) * rank) or ()
+    else:
+        bs = tuple(int(b) for b in block_sizes)
+        bs = bs[len(bs) - rank:] if len(bs) >= rank \
+            else (1,) * (rank - len(bs)) + bs
+    if any(b < 1 for b in bs):
+        raise ValueError(f'block sizes must be >= 1, got {bs}')
+    return bs
+
+
+def _expand_blocked(acc: jnp.ndarray, axis: int, n: int, b: int):
+    """(… ⌈n/b⌉ …) -> (… n …): each index reads its covering block."""
+    if int(acc.shape[axis]) == n:
+        return acc
+    return jnp.repeat(acc, b, axis=axis, total_repeat_length=n)
+
+
+def _blocked_max(x: jnp.ndarray, axis: int, b: int) -> jnp.ndarray:
+    """Max over length-b blocks along ``axis`` (zero padding is inert: SM3
+    statistics are >= 0)."""
+    n = int(x.shape[axis])
+    nb = _ceil_div(n, b)
+    if nb == n:
+        return x
+    pad = nb * b - n
+    if pad:
+        x = jnp.pad(x, [(0, pad) if a == axis else (0, 0)
+                        for a in range(x.ndim)])
+    x = x.reshape(x.shape[:axis] + (nb, b) + x.shape[axis + 1:])
+    return jnp.max(x, axis=axis + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedCover(Cover):
+    """Co-dim-1 *slabs* of thickness b (paper §3 arbitrary covers).
+
+    Per axis a, accumulator r covers b_a consecutive co-dim-1 slices:
+    storage Θ(Σ ⌈n_i/b_i⌉) — a knob trading preconditioner precision for
+    memory. ``block_sizes`` is an int (every axis) or a right-aligned tuple
+    (leading axes default to 1 == exact co-dim-1). b = 1 everywhere is
+    exactly ``Codim1Cover``; coarser blocks ⇒ pointwise-larger ν and
+    smaller state (Prop.-1 monotonicity, tested).
+
+    rank <= 1 leaves get a single blocked 1-D accumulator (⌈n/b⌉); rank 0
+    keeps the scalar accumulator."""
+    block_sizes: Union[int, Tuple[int, ...]] = 1
+    kind = 'blocked'
+
+    def _blocks(self, shape: Shape) -> Shape:
+        return _normalize_blocks(self.block_sizes, len(shape))
+
+    def acc_shapes(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if not shape:
+            return [()]
+        bs = self._blocks(shape)
+        if len(shape) == 1:
+            return [(_ceil_div(shape[0], bs[0]),)]
+        return [tuple(_ceil_div(n, bs[a]) if a == axis else 1
+                      for a, n in enumerate(shape))
+                for axis in range(len(shape))]
+
+    def expand_acc(self, r, acc, shape):
+        shape = tuple(int(s) for s in shape)
+        if not shape:
+            return acc
+        bs = self._blocks(shape)
+        axis = 0 if len(shape) == 1 else r
+        return _expand_blocked(acc, axis, shape[axis], bs[axis])
+
+    def fold_nu_to_mu(self, nu):
+        shape = tuple(int(s) for s in nu.shape)
+        if not shape:
+            return (nu,)
+        bs = self._blocks(shape)
+        if len(shape) == 1:
+            return (_blocked_max(nu, 0, bs[0]),)
+        return tuple(_blocked_max(_max_over_others(nu, a), a, bs[a])
+                     for a in range(len(shape)))
+
+    def merged_2d_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) < 2 or shape[-1] <= 1:
+            return None
+        bs = self._blocks(shape)
+        p = len(shape)
+        C = shape[-1]
+        R = _nelems(shape) // C
+        lead = shape[:-1]
+
+        def row_in(mu):
+            # leading accumulators keep a 1 on the last axis, so the
+            # broadcast-min lands on (n_1, ..., n_{p-1}, 1) directly
+            nu = self.expand_acc(0, mu[0], shape)
+            for a in range(1, p - 1):
+                nu = jnp.minimum(nu, self.expand_acc(a, mu[a], shape))
+            return jnp.broadcast_to(nu, lead + (1,)).reshape(R, 1)
+
+        def col_in(mu):
+            return _expand_blocked(mu[-1], p - 1, C, bs[-1]).reshape(1, C)
+
+        def fold_out(row_new, col_new, mu):
+            del mu
+            lead_full = row_new.reshape(lead + (1,))
+            outs = []
+            for a in range(p - 1):
+                m = lead_full if p == 2 else jnp.max(
+                    lead_full, axis=tuple(b for b in range(p - 1) if b != a),
+                    keepdims=True)
+                outs.append(_blocked_max(m, a, bs[a]))
+            new_last = _blocked_max(
+                col_new.reshape((1,) * (p - 1) + (C,)), p - 1, bs[-1])
+            return tuple(outs) + (new_last,)
+
+        return Merged2DPlan(rows=R, cols=C, row_in=row_in, col_in=col_in,
+                            fold_out=fold_out)
+
+    def vec_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) >= 2:
+            return None
+        if not shape:
+            return _identity_vec_plan(shape, ())
+        n = shape[0]
+        b = self._blocks(shape)[0]
+        if b == 1:
+            return _identity_vec_plan(shape, shape)
+        return VecPlan(
+            expand=lambda mu: _expand_blocked(mu[0], 0, n, b).reshape(-1),
+            fold=lambda acc: (_blocked_max(acc.reshape(n), 0, b),))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedAxesCover(_BroadcastCover):
+    """Merge adjacent axes into one accumulator axis group.
+
+    ``groups`` partitions the axes into contiguous runs, e.g.
+    ``((0,), (1, 2))`` on a (d, heads, head_dim) tensor stores a (d, 1, 1)
+    accumulator and a single (1, heads, head_dim) accumulator — sets
+    {(i₁,i₂) fixed} are intersections of co-dim-1 slices, i.e. a *finer*
+    cover: Θ(d + h·hd) memory for a pointwise-smaller ν (tighter
+    preconditioner). Rank must equal the number of grouped axes; target
+    specific leaves via CoverPolicy rules."""
+    groups: Tuple[Tuple[int, ...], ...]
+    kind = 'grouped'
+
+    def __post_init__(self):
+        groups = tuple(tuple(int(a) for a in g) for g in self.groups)
+        object.__setattr__(self, 'groups', groups)
+        flat = [a for g in groups for a in g]
+        if not groups or any(not g for g in groups) \
+                or flat != list(range(len(flat))):
+            raise ValueError(
+                'groups must be non-empty contiguous runs partitioning '
+                f'axes 0..p-1 in order, got {groups}')
+
+    @property
+    def rank(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+    def acc_shapes(self, shape):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != self.rank:
+            raise ValueError(
+                f'GroupedAxesCover{self.groups} expects rank {self.rank} '
+                f'leaves, got shape {shape}; scope it with CoverPolicy '
+                'rules to matching leaves')
+        return [tuple(n if a in g else 1 for a, n in enumerate(shape))
+                for g in self.groups]
+
+    def fold_nu_to_mu(self, nu):
+        shape = tuple(int(s) for s in nu.shape)
+        shapes = self.acc_shapes(shape)
+        out = []
+        for s in shapes:
+            axes = tuple(a for a in range(len(s)) if s[a] == 1)
+            out.append(jnp.max(nu, axis=axes, keepdims=True)
+                       if axes else nu)
+        return tuple(out)
+
+    def merged_2d_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        self.acc_shapes(shape)  # validates rank
+        if len(self.groups) < 2:
+            return None  # single group == full accumulator -> vec path
+        tail = self.groups[-1]
+        N = _nelems(tuple(shape[a] for a in tail))
+        if N <= 1:
+            return None
+        p = len(shape)
+        M = _nelems(shape) // N
+        lead_nd = tail[0]
+        lead = shape[:lead_nd]
+
+        def row_in(mu):
+            nu = mu[0]
+            for acc in mu[1:-1]:
+                nu = jnp.minimum(nu, acc)
+            return jnp.broadcast_to(
+                nu, lead + (1,) * (p - lead_nd)).reshape(M, 1)
+
+        def col_in(mu):
+            return mu[-1].reshape(1, N)
+
+        def fold_out(row_new, col_new, mu):
+            new_last = col_new.reshape(mu[-1].shape)
+            lead_full = row_new.reshape(lead + (1,) * (p - lead_nd))
+            if len(self.groups) == 2:
+                return (lead_full, new_last)
+            outs = []
+            for g in self.groups[:-1]:
+                axes = tuple(a for a in range(lead_nd) if a not in g)
+                outs.append(jnp.max(lead_full, axis=axes, keepdims=True))
+            return tuple(outs) + (new_last,)
+
+        return Merged2DPlan(rows=M, cols=N, row_in=row_in, col_in=col_in,
+                            fold_out=fold_out)
+
+    def vec_plan(self, shape):
+        shape = tuple(int(s) for s in shape)
+        shapes = self.acc_shapes(shape)
+        if len(shapes) == 1:  # single group: full accumulator
+            return _identity_vec_plan(shape, shapes[0])
+        return None
+
+
+# ---------------------------------------------------------------------------
+# cover specs + per-leaf policy
+# ---------------------------------------------------------------------------
+
+def parse_cover(spec: str) -> Cover:
+    """Parse a config-friendly cover spec string.
+
+    'codim1' | 'full' | 'blocked:B' | 'blocked:B1xB2x...' (right-aligned)
+    | 'grouped:0|1,2' (groups of axis indices, '|'-separated).
+    """
+    s = spec.strip().lower()
+    if s in ('codim1', 'co-dim-1', 'default'):
+        return Codim1Cover()
+    if s in ('full', 'adagrad'):
+        return FullCover()
+    if s.startswith('blocked:'):
+        body = s.split(':', 1)[1]
+        sizes = tuple(int(b) for b in body.split('x'))
+        return BlockedCover(sizes[0] if len(sizes) == 1 else sizes)
+    if s.startswith('grouped:'):
+        body = s.split(':', 1)[1]
+        groups = tuple(tuple(int(a) for a in g.split(','))
+                       for g in body.split('|'))
+        return GroupedAxesCover(groups)
+    raise ValueError(f'unknown cover spec {spec!r} (expected codim1 | full '
+                     '| blocked:B[xB...] | grouped:0|1,2)')
+
+
+def as_cover(spec) -> Cover:
+    """Coerce None / spec string / Cover instance to a Cover."""
+    if spec is None:
+        return Codim1Cover()
+    if isinstance(spec, Cover):
+        return spec
+    if isinstance(spec, str):
+        return parse_cover(spec)
+    raise TypeError(f'cannot interpret {spec!r} as a Cover')
+
+
+def key_str(k) -> str:
+    """One tree-path entry as a string — shared with launch.sharding so
+    cover rules and sharding rules stringify the same leaf identically."""
+    for attr in ('key', 'name'):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return f'#{k.idx}' if hasattr(k, 'idx') else str(k)
+
+
+def keystr(path) -> str:
+    """'/'-joined tree path, e.g. 'blocks/p0/attn/wq' — the string cover
+    rules match against."""
+    return '/'.join(key_str(k) for k in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverPolicy:
+    """Path-regex rules resolving a Cover per parameter leaf.
+
+    ``rules`` is an ordered tuple of (pattern, cover-spec); the first
+    pattern that ``re.search``-matches the leaf's '/'-joined path wins,
+    else ``default`` applies. Covers may be Cover instances or spec strings
+    (see ``parse_cover``) — config systems pass strings."""
+    rules: Tuple[Tuple[str, Any], ...] = ()
+    default: Any = None
+
+    def resolve(self, path: str) -> Cover:
+        for pattern, cover in self.rules:
+            if re.search(pattern, path):
+                return as_cover(cover)
+        return as_cover(self.default)
+
+    def describe(self) -> str:
+        rules = ', '.join(f'{p!r} -> {as_cover(c).kind}'
+                          for p, c in self.rules)
+        return f'CoverPolicy([{rules}], default={as_cover(self.default).kind})'
+
+
+DEFAULT_POLICY = CoverPolicy()
+
+
+def cover_memory_ratio(shape: Sequence[int],
+                       cover: Optional[Cover] = None) -> float:
+    """Θ(Π n_i) / Θ(Σ acc sizes): the paper's memory-saving factor, for any
+    cover (default: co-dim-1)."""
+    shape = tuple(int(s) for s in shape)
+    cover = as_cover(cover)
+    full = float(np.prod(shape)) if shape else 1.0
+    return full / max(float(cover.state_size(shape)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# abstract index-set reference (paper §3 pseudocode form)
+# ---------------------------------------------------------------------------
 
 class GeneralCover:
     """Abstract cover {S_r} over a flat vector of dimension d (paper Alg. 1/2).
 
-    ``sets`` is a list of 1-D integer index arrays. Every index in [d] must be
-    covered. Implemented with a dense (k, d) membership mask — only for small
-    d (tests / research); production uses the tensor co-dim-1 path.
+    ``sets`` is a list of non-empty 1-D integer index arrays. Every index in
+    [d] must be covered. Implemented with a dense (k, d) membership mask —
+    only for small d (tests / research); production uses the tensor covers
+    above.
     """
 
     def __init__(self, sets: Sequence[np.ndarray], d: int):
         self.d = int(d)
         self.k = len(sets)
+        if self.k == 0:
+            raise ValueError('cover has no sets')
         mask = np.zeros((self.k, self.d), dtype=bool)
         for r, s in enumerate(sets):
-            mask[r, np.asarray(s, dtype=np.int64)] = True
+            s = np.asarray(s, dtype=np.int64)
+            if s.size == 0:
+                # an empty set would make max_over_sets emit -inf and poison
+                # every min_over_covering that touches it
+                raise ValueError(f'cover set {r} is empty')
+            mask[r, s] = True
         if not mask.any(axis=0).all():
             raise ValueError('cover does not cover all of [d]')
         self.mask = jnp.asarray(mask)
@@ -77,6 +648,51 @@ class GeneralCover:
         idx = np.arange(m * n).reshape(m, n)
         sets = [idx[i, :] for i in range(m)] + [idx[:, j] for j in range(n)]
         return GeneralCover(sets, m * n)
+
+    @staticmethod
+    def from_blocks(shape: Sequence[int], block_sizes) -> 'GeneralCover':
+        """Blocked co-dim-1 slabs of a tensor, flattened row-major — the
+        paper-pseudocode twin of ``BlockedCover`` (independently
+        constructed, for cross-validation). Set order matches the
+        concatenation order of BlockedCover accumulators."""
+        shape = tuple(int(s) for s in shape)
+        d = _nelems(shape)
+        if not shape or len(shape) == 1:
+            n = shape[0] if shape else 1
+            b = _normalize_blocks(block_sizes, 1)[0] if shape else 1
+            idx = np.arange(max(d, 1))
+            sets = [idx[k * b:(k + 1) * b] for k in range(_ceil_div(n, b))] \
+                if shape else [idx]
+            return GeneralCover(sets, max(d, 1))
+        bs = _normalize_blocks(block_sizes, len(shape))
+        idx = np.arange(d).reshape(shape)
+        sets = []
+        for axis, n in enumerate(shape):
+            for k in range(_ceil_div(n, bs[axis])):
+                sl = [slice(None)] * len(shape)
+                sl[axis] = slice(k * bs[axis], (k + 1) * bs[axis])
+                sets.append(idx[tuple(sl)].reshape(-1))
+        return GeneralCover(sets, d)
+
+    @staticmethod
+    def from_tensor_cover(cover: Cover, shape: Sequence[int]
+                          ) -> 'GeneralCover':
+        """Index sets of any tensor Cover, via its ``expand_acc`` primitive:
+        set (r, cell) = indices reading that accumulator cell. Set order
+        matches the concatenation of ``acc.reshape(-1)`` per accumulator,
+        so mu vectors can be compared directly against tensor-cover state."""
+        shape = tuple(int(s) for s in shape)
+        d = max(_nelems(shape), 1)
+        sets = []
+        for r, acc_shape in enumerate(cover.acc_shapes(shape)):
+            a = _nelems(acc_shape)
+            ids = np.asarray(cover.expand_acc(
+                r, jnp.arange(a, dtype=jnp.float32).reshape(acc_shape),
+                shape))
+            ids = np.broadcast_to(ids, shape).astype(np.int64).reshape(-1)
+            for c in range(a):
+                sets.append(np.nonzero(ids == c)[0])
+        return GeneralCover(sets, d)
 
     # --- paper pseudocode, vectorized over the (k, d) mask ---------------
 

@@ -5,19 +5,26 @@ both analytically from shapes (no allocation; usable for the full-size
 configs) and from materialized states (used by tests to validate the
 analytic path). This is the quantity the paper reports as "Memory Usage per
 Core" minus the model/activation bytes.
+
+SM3 accounting is cover-aware: pass a ``covers.CoverPolicy`` to account for
+non-default per-leaf covers (blocked, grouped, full); the default is the
+paper's co-dim-1 cover, matching the pre-API numbers exactly.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.covers import codim1_cover_shapes
+from repro.core import covers as covers_lib
 
 PyTree = Any
 _F32 = 4  # bytes
+
+_is_shape_leaf = lambda x: isinstance(x, tuple) and all(
+    isinstance(i, int) for i in x)
 
 
 def _nelems(shape: Sequence[int]) -> int:
@@ -27,28 +34,47 @@ def _nelems(shape: Sequence[int]) -> int:
     return n
 
 
-def param_shapes(params_or_shapes: PyTree):
+def _leaf_shape(leaf) -> Tuple[int, ...]:
+    if hasattr(leaf, 'shape'):
+        return tuple(int(s) for s in leaf.shape)
+    return tuple(int(s) for s in leaf)
+
+
+def param_shapes(params_or_shapes: PyTree) -> List[Tuple[int, ...]]:
     """Accepts a pytree of arrays / ShapeDtypeStructs / shape tuples."""
-    leaves = jax.tree.leaves(params_or_shapes,
-                             is_leaf=lambda x: isinstance(x, tuple) and all(
-                                 isinstance(i, int) for i in x))
-    shapes = []
-    for leaf in leaves:
-        if hasattr(leaf, 'shape'):
-            shapes.append(tuple(int(s) for s in leaf.shape))
-        else:
-            shapes.append(tuple(int(s) for s in leaf))
-    return shapes
+    leaves = jax.tree.leaves(params_or_shapes, is_leaf=_is_shape_leaf)
+    return [_leaf_shape(leaf) for leaf in leaves]
+
+
+def param_shapes_with_paths(params_or_shapes: PyTree
+                            ) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(path, shape) per leaf — paths in the cover/sharding rule style."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_or_shapes,
+                                                   is_leaf=_is_shape_leaf)
+    return [(covers_lib.keystr(p), _leaf_shape(leaf)) for p, leaf in flat]
+
+
+def sm3_accumulator_elems(params_or_shapes: PyTree,
+                          cover_policy: Optional[covers_lib.CoverPolicy]
+                          = None) -> int:
+    """Total SM3 accumulator elements under a cover policy (co-dim-1 when
+    None) — the Θ(Σ...) quantity the paper's memory claim is about."""
+    policy = cover_policy or covers_lib.DEFAULT_POLICY
+    return sum(policy.resolve(path).state_size(shape)
+               for path, shape in param_shapes_with_paths(params_or_shapes))
 
 
 def optimizer_state_bytes(optimizer: str, params_or_shapes: PyTree,
-                          beta1: float = 0.9) -> int:
+                          beta1: float = 0.9,
+                          cover_policy: Optional[covers_lib.CoverPolicy]
+                          = None) -> int:
     """Exact bytes of auxiliary optimizer state (f32), by optimizer name.
 
       adam      : 2d                  (m, v)
       adagrad   : d (+d momentum)     (γ)
       adafactor : Σ rows+cols (+d momentum)  [factored v, rank≥2]
-      sm3       : Σ co-dim-1 accumulators (+d momentum)
+      sm3       : Σ cover accumulators (+d momentum); co-dim-1 by default,
+                  any per-leaf policy via ``cover_policy``
       sgd       : d momentum
     """
     shapes = param_shapes(params_or_shapes)
@@ -70,9 +96,8 @@ def optimizer_state_bytes(optimizer: str, params_or_shapes: PyTree,
                 acc += _nelems(s)
         return (acc + mom) * _F32
     if optimizer in ('sm3', 'sm3-i', 'sm3-ii'):
-        acc = 0
-        for s in shapes:
-            acc += sum(_nelems(a) for a in codim1_cover_shapes(s))
+        acc = sm3_accumulator_elems(params_or_shapes,
+                                    cover_policy=cover_policy)
         return (acc + mom) * _F32
     raise ValueError(f'unknown optimizer {optimizer!r}')
 
@@ -84,12 +109,15 @@ def measured_state_bytes(state: PyTree) -> int:
 
 def memory_report(params_or_shapes: PyTree,
                   optimizers=('adam', 'adagrad', 'adafactor', 'sm3', 'sgd'),
-                  beta1: float = 0.9) -> Dict[str, Dict[str, float]]:
+                  beta1: float = 0.9,
+                  cover_policy: Optional[covers_lib.CoverPolicy] = None
+                  ) -> Dict[str, Dict[str, float]]:
     shapes = param_shapes(params_or_shapes)
     d = sum(_nelems(s) for s in shapes)
     out = {}
     for name in optimizers:
-        b = optimizer_state_bytes(name, params_or_shapes, beta1=beta1)
+        b = optimizer_state_bytes(name, params_or_shapes, beta1=beta1,
+                                  cover_policy=cover_policy)
         out[name] = {
             'state_bytes': b,
             'state_gib': b / 2**30,

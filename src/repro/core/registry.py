@@ -2,13 +2,58 @@
 
 The single entry point the trainer, examples, and benchmarks use, so every
 optimizer is constructed the same way (schedule + optimizer + momentum).
+
+``OptimizerSpec.extra`` is validated against the per-optimizer known-keys
+set below — a typo like ``fusd`` raises instead of silently degrading to
+the slow path. SM3 cover configuration rides in ``extra``:
+
+    extra={'default_cover': 'blocked:8'}                  # every leaf
+    extra={'cover_rules': [('embed|lm_head', 'blocked:32'),
+                           ('attn/w[qkv]', 'grouped:0|1,2')]}
+
+Rules are (path-regex, cover-spec) pairs resolved per leaf by
+``covers.CoverPolicy`` (first match wins; specs may also be Cover
+instances).
 """
 from __future__ import annotations
 
 from typing import Optional, Union
 
-from repro.core import baselines, schedules, sm3
+import jax.numpy as jnp
+
+from repro.core import baselines, covers, schedules, sm3
 from repro.core.base import GradientTransformation, OptimizerSpec
+
+_COMMON_EXTRA = frozenset({'schedule', 'warmup_steps'})
+_COVER_EXTRA = frozenset({'cover_rules', 'default_cover'})
+KNOWN_EXTRA_KEYS = {
+    'sm3': _COMMON_EXTRA | _COVER_EXTRA
+    | {'clip_norm', 'use_pallas', 'fused', 'stacked'},
+    'sm3-i': _COMMON_EXTRA | _COVER_EXTRA | {'clip_norm'},
+    'adam': _COMMON_EXTRA,
+    'adagrad': _COMMON_EXTRA,
+    'adafactor': _COMMON_EXTRA,
+    'sgd': _COMMON_EXTRA,
+}
+KNOWN_EXTRA_KEYS['sm3-ii'] = KNOWN_EXTRA_KEYS['sm3']
+
+
+def _validate_extra(name: str, extra: dict) -> None:
+    allowed = KNOWN_EXTRA_KEYS[name]
+    unknown = sorted(set(extra) - allowed)
+    if unknown:
+        raise ValueError(
+            f'unknown OptimizerSpec.extra keys for {name!r}: {unknown} '
+            f'(allowed: {sorted(allowed)})')
+
+
+def _cover_policy(extra: dict) -> Optional[covers.CoverPolicy]:
+    rules = tuple((pat, covers.as_cover(c))
+                  for pat, c in (extra.get('cover_rules') or ()))
+    default = extra.get('default_cover')
+    if not rules and default is None:
+        return None
+    return covers.CoverPolicy(rules=rules, default=covers.as_cover(default))
 
 
 def make_optimizer(spec: Union[OptimizerSpec, dict],
@@ -17,6 +62,9 @@ def make_optimizer(spec: Union[OptimizerSpec, dict],
     if isinstance(spec, dict):
         spec = OptimizerSpec(**spec)
     name = spec.name.lower()
+    if name not in KNOWN_EXTRA_KEYS:
+        raise ValueError(f'unknown optimizer {spec.name!r}')
+    _validate_extra(name, spec.extra)
 
     sched_name = spec.extra.get('schedule',
                                 'constant' if name in ('sm3', 'sm3-i', 'sm3-ii',
@@ -27,17 +75,18 @@ def make_optimizer(spec: Union[OptimizerSpec, dict],
                                  warmup_steps=warmup,
                                  total_steps=total_steps, d_model=d_model)
 
-    if name in ('sm3', 'sm3-ii'):
-        return sm3.sm3(lr, beta1=spec.beta1, variant='II',
-                       weight_decay=spec.weight_decay,
-                       clip_norm=spec.extra.get('clip_norm'),
-                       use_pallas=spec.extra.get('use_pallas', False),
-                       fused=spec.extra.get('fused', False),
-                       stacked=spec.extra.get('stacked', True))
-    if name == 'sm3-i':
-        return sm3.sm3(lr, beta1=spec.beta1, variant='I',
-                       weight_decay=spec.weight_decay,
-                       clip_norm=spec.extra.get('clip_norm'))
+    if name in ('sm3', 'sm3-ii', 'sm3-i'):
+        cfg = sm3.SM3Config(
+            variant='I' if name == 'sm3-i' else 'II',
+            beta1=spec.beta1,
+            weight_decay=spec.weight_decay,
+            clip_norm=spec.extra.get('clip_norm'),
+            accumulator_dtype=jnp.dtype(spec.accumulator_dtype),
+            use_pallas=spec.extra.get('use_pallas', False),
+            fused=spec.extra.get('fused', False),
+            stacked=spec.extra.get('stacked', True),
+            cover_policy=_cover_policy(spec.extra))
+        return sm3.sm3(lr, config=cfg)
     if name == 'adam':
         return baselines.adam(lr, beta1=spec.beta1, beta2=spec.beta2,
                               weight_decay=spec.weight_decay)

@@ -1,8 +1,11 @@
 """SM3-I and SM3-II (Anil, Gupta, Koren, Singer — NeurIPS 2019), in JAX.
 
-Implements Algorithms SM3-I and SM3-II with the practical co-dimension-1
-covers of §4. Per parameter tensor of shape (n_1, ..., n_p) the state is p
-accumulators of shapes (n_1,1,..), (1,n_2,1,..), ... — Θ(Σ n_i) memory.
+Implements Algorithms SM3-I and SM3-II over a per-leaf *cover* of the
+parameter indices (core.covers). The default is the practical co-dimension-1
+cover of §4 — per tensor of shape (n_1, ..., n_p) the state is p
+accumulators of shapes (n_1,1,..), (1,n_2,1,..), ... — Θ(Σ n_i) memory —
+but any `covers.Cover` can be configured per leaf via a
+`covers.CoverPolicy` (blocked slabs, merged axes, full Adagrad, ...).
 
 SM3-II (the variant used in all the paper's experiments, and our default):
 
@@ -20,47 +23,65 @@ The transform emits *preconditioned directions* g/√ν; learning rate and
 momentum are composed via base.chain (momentum applies after preconditioning,
 as in the released SM3: m_t = β1 m_{t-1} + (1−β1) u_t).
 
+Construction: ``sm3(lr, config=SM3Config(...))`` is the canonical API; the
+flat kwargs (``sm3(lr, beta1=..., fused=..., ...)``) are kept for backward
+compatibility and build the same config.
+
 For 2-D parameters the update can be dispatched to the fused Pallas TPU
 kernel (repro.kernels.sm3) with ``use_pallas=True``; the jnp path here is the
 reference semantics and the default on CPU.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import base
-from repro.core.covers import codim1_cover_shapes
+from repro.core import covers as covers_lib
+from repro.core.covers import Codim1Cover, CoverPolicy
 
 PyTree = Any
 
+_is_param_leaf = lambda x: isinstance(x, jnp.ndarray) or hasattr(x, 'shape')
+
+
+@dataclasses.dataclass(frozen=True)
+class SM3Config:
+    """One config object for the whole SM3 construction surface.
+
+    Consolidates the historical ``sm3(...)`` kwarg sprawl; the flat kwargs
+    remain accepted (deprecation path: new call sites should pass
+    ``config=``) and are validated against this dataclass's defaults so the
+    two styles cannot silently conflict.
+
+    ``cover_policy`` resolves a `covers.Cover` per parameter leaf by
+    path-regex rules (None → co-dim-1 everywhere, the paper §4 default).
+    """
+    variant: str = 'II'
+    beta1: float = 0.9
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    accumulator_dtype: Any = jnp.float32
+    use_pallas: bool = False
+    fused: bool = False
+    stacked: bool = True
+    cover_policy: Optional[CoverPolicy] = None
+
+    def policy(self) -> CoverPolicy:
+        return self.cover_policy or covers_lib.DEFAULT_POLICY
+
 
 class SM3State(NamedTuple):
-    mu: PyTree  # per-param tuple of accumulators (co-dim-1 broadcastable)
+    mu: PyTree  # per-param tuple of cover accumulators
 
 
-def _init_mu(p: jnp.ndarray, dtype: jnp.dtype) -> Tuple[jnp.ndarray, ...]:
-    return tuple(jnp.zeros(s, dtype=dtype) for s in codim1_cover_shapes(p.shape))
-
-
-def _nu_from_mu(mu: Tuple[jnp.ndarray, ...], shape) -> jnp.ndarray:
-    """ν(i) = min over covering accumulators, via broadcast mins."""
-    if len(mu) == 1:
-        return jnp.broadcast_to(mu[0], shape)
-    nu = mu[0]
-    for acc in mu[1:]:
-        nu = jnp.minimum(nu, acc)
-    return jnp.broadcast_to(nu, shape)
-
-
-def _max_over_others(x: jnp.ndarray, axis: int) -> jnp.ndarray:
-    """max over all axes except ``axis``, keepdims (→ accumulator shape)."""
-    if x.ndim <= 1:
-        return x
-    axes = tuple(a for a in range(x.ndim) if a != axis)
-    return jnp.max(x, axis=axes, keepdims=True)
+def _init_mu(p, dtype: jnp.dtype,
+             cover: covers_lib.Cover) -> Tuple[jnp.ndarray, ...]:
+    return tuple(jnp.zeros(s, dtype=dtype)
+                 for s in cover.acc_shapes(tuple(p.shape)))
 
 
 def _precondition(g: jnp.ndarray, nu: jnp.ndarray) -> jnp.ndarray:
@@ -70,6 +91,7 @@ def _precondition(g: jnp.ndarray, nu: jnp.ndarray) -> jnp.ndarray:
 
 
 def _update_leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...],
+                    cover: covers_lib.Cover = Codim1Cover(),
                     accumulator_dtype: jnp.dtype = jnp.float32,
                     use_pallas: bool = False):
     """One SM3-II preconditioner step for a single leaf: (u, new_mu).
@@ -77,44 +99,48 @@ def _update_leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...],
     The single source of truth for the leaf semantics — shared by
     scale_by_sm3 and the fused mode's jnp fallback path."""
     g32 = g.astype(accumulator_dtype)
-    if use_pallas and g.ndim == 2 and len(mu) == 2:
+    if use_pallas and g.ndim == 2 and len(mu) == 2 \
+            and isinstance(cover, Codim1Cover):
         from repro.kernels.sm3 import ops as sm3_ops  # lazy: CPU default path stays dep-free
         u, new_row, new_col = sm3_ops.sm3_ii_update(g32, mu[0], mu[1])
         return u.astype(g.dtype), (new_row, new_col)
-    nu = _nu_from_mu(mu, g.shape) + jnp.square(g32)
+    nu = cover.nu_from_mu(mu, g.shape) + jnp.square(g32)
     u = _precondition(g32, nu)
-    new_mu = tuple(_max_over_others(nu, a) for a in range(len(mu))) \
-        if g.ndim >= 2 else (nu,)
-    return u.astype(g.dtype), new_mu
+    return u.astype(g.dtype), cover.fold_nu_to_mu(nu)
 
 
 def scale_by_sm3(variant: str = 'II',
                  accumulator_dtype: jnp.dtype = jnp.float32,
-                 use_pallas: bool = False) -> base.GradientTransformation:
+                 use_pallas: bool = False,
+                 cover_policy: Optional[CoverPolicy] = None
+                 ) -> base.GradientTransformation:
     """The SM3 preconditioner as a gradient transformation.
 
     variant: 'I' (Alg. SM3-I) or 'II' (Alg. SM3-II, default & paper's choice).
+    cover_policy: per-leaf cover resolution (None → co-dim-1 everywhere).
     """
     if variant not in ('I', 'II'):
         raise ValueError(f'unknown SM3 variant {variant!r}')
+    policy = cover_policy or covers_lib.DEFAULT_POLICY
 
     def init_fn(params):
-        mu = jax.tree.map(lambda p: _init_mu(p, accumulator_dtype), params,
-                          is_leaf=lambda x: isinstance(x, jnp.ndarray) or hasattr(x, 'shape'))
-        return SM3State(mu=mu)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=_is_param_leaf)
+        mu = [_init_mu(p, accumulator_dtype,
+                       policy.resolve(covers_lib.keystr(path)))
+              for path, p in flat]
+        return SM3State(mu=treedef.unflatten(mu))
 
-    def _leaf_ii(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
-        return _update_leaf_ii(g, mu, accumulator_dtype=accumulator_dtype,
+    def _leaf_ii(g, mu, cover):
+        return _update_leaf_ii(g, mu, cover,
+                               accumulator_dtype=accumulator_dtype,
                                use_pallas=use_pallas)
 
-    def _update_leaf_i(g: jnp.ndarray, mu: Tuple[jnp.ndarray, ...]):
+    def _update_leaf_i(g, mu, cover):
         g32 = g.astype(accumulator_dtype)
         g2 = jnp.square(g32)
-        if g.ndim >= 2:
-            new_mu = tuple(m + _max_over_others(g2, a) for a, m in enumerate(mu))
-        else:
-            new_mu = (mu[0] + g2,)
-        nu = _nu_from_mu(new_mu, g.shape)
+        new_mu = tuple(m + f for m, f in zip(mu, cover.fold_nu_to_mu(g2)))
+        nu = cover.nu_from_mu(new_mu, g.shape)
         u = _precondition(g32, nu)
         return u.astype(g.dtype), new_mu
 
@@ -122,14 +148,30 @@ def scale_by_sm3(variant: str = 'II',
 
     def update_fn(updates, state, params=None):
         del params
-        flat_g, treedef = jax.tree.flatten(updates)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(updates)
+        flat_g = [g for _, g in flat]
+        leaf_covers = [policy.resolve(covers_lib.keystr(p)) for p, _ in flat]
         flat_mu = treedef.flatten_up_to(state.mu)
-        out = [leaf_update(g, mu) for g, mu in zip(flat_g, flat_mu)]
+        out = [leaf_update(g, mu, c)
+               for g, mu, c in zip(flat_g, flat_mu, leaf_covers)]
         new_updates = treedef.unflatten([u for u, _ in out])
         new_mu = treedef.unflatten([m for _, m in out])
         return new_updates, SM3State(mu=new_mu)
 
     return base.GradientTransformation(init_fn, update_fn)
+
+
+def _config_from_kwargs(config: Optional[SM3Config],
+                        legacy: dict) -> SM3Config:
+    if config is None:
+        return SM3Config(**legacy)
+    defaults = {f.name: f.default for f in dataclasses.fields(SM3Config)}
+    clashes = sorted(k for k, v in legacy.items() if v != defaults[k])
+    if clashes:
+        raise ValueError(
+            'pass SM3 hyperparameters either via config=SM3Config(...) or '
+            f'via the legacy kwargs, not both (got both config and {clashes})')
+    return config
 
 
 def sm3(learning_rate: base.ScalarOrSchedule,
@@ -140,45 +182,61 @@ def sm3(learning_rate: base.ScalarOrSchedule,
         accumulator_dtype: jnp.dtype = jnp.float32,
         use_pallas: bool = False,
         fused: bool = False,
-        stacked: bool = True) -> base.GradientTransformation:
+        stacked: bool = True,
+        cover_policy: Optional[CoverPolicy] = None,
+        *, config: Optional[SM3Config] = None) -> base.GradientTransformation:
     """The full SM3 optimizer as used in the paper's experiments.
 
     Pipeline: [global-norm clip] → SM3 precondition → momentum(β1, EMA)
     → [decoupled weight decay] → −lr scaling. The paper uses β1 = 0.9
     (0.95 for the very large BERT batches) and *no* post-warmup LR decay.
 
+    ``config=SM3Config(...)`` is the canonical construction API; the flat
+    kwargs are the back-compat spelling of the same fields (they may not be
+    mixed with ``config``).
+
     ``fused=True`` returns a FusedGradientTransformation whose
     ``fused_update`` executes the whole pipeline in single Pallas kernel
-    launches (see ``_fused_sm3`` for the dispatch rules): rank≥2 tensors
-    are grouped by merged-2-D shape and streamed through one *stacked*
-    kernel launch per (shape, dtype) bucket (~4 instead of ~7 M×N HBM
-    streams, O(#distinct shapes) launches), rank≤1 leaves are packed into
-    flat 2-D buckets and updated by one elementwise kernel launch. The
-    state pytree and the reference ``update`` semantics are identical to
-    the unfused chain, so checkpoints and sharding specs carry over.
-    ``stacked=False`` keeps the per-leaf fused dispatch (one launch per
-    rank≥2 leaf — the pre-bucketing behavior, retained for comparison
-    benchmarks and parity tests).
+    launches (see ``_fused_sm3`` for the dispatch rules): each leaf's cover
+    emits a static merged-2-D plan, leaves are grouped by merged (M, N)
+    shape and streamed through one *stacked* kernel launch per
+    (shape, dtype) bucket (~4 instead of ~7 M×N HBM streams, O(#distinct
+    shapes) launches); covers reducible to a per-element accumulator
+    (rank≤1 leaves, FullCover, blocked vectors) are packed into flat 2-D
+    buckets and updated by one elementwise kernel launch; covers with no
+    plan fall back to the exact jnp reference per leaf. The state pytree
+    and the reference ``update`` semantics are identical to the unfused
+    chain, so checkpoints and sharding specs carry over. ``stacked=False``
+    keeps the per-leaf fused dispatch (one launch per rank≥2 leaf — the
+    pre-bucketing behavior, retained for comparison benchmarks and parity
+    tests).
     """
-    if fused:
-        if variant != 'II':
+    cfg = _config_from_kwargs(config, dict(
+        beta1=beta1, variant=variant, weight_decay=weight_decay,
+        clip_norm=clip_norm, accumulator_dtype=accumulator_dtype,
+        use_pallas=use_pallas, fused=fused, stacked=stacked,
+        cover_policy=cover_policy))
+    if cfg.variant not in ('I', 'II'):
+        raise ValueError(f'unknown SM3 variant {cfg.variant!r}')
+    if cfg.fused:
+        if cfg.variant != 'II':
             raise ValueError('fused=True implements SM3-II only '
-                             f'(got variant {variant!r})')
-        if jnp.dtype(accumulator_dtype) != jnp.dtype(jnp.float32):
+                             f'(got variant {cfg.variant!r})')
+        if jnp.dtype(cfg.accumulator_dtype) != jnp.dtype(jnp.float32):
             raise ValueError('fused=True requires float32 accumulators '
                              '(the kernels carry ν in f32)')
-        return _fused_sm3(learning_rate, beta1=beta1,
-                          weight_decay=weight_decay, clip_norm=clip_norm,
-                          stacked=stacked)
+        return _fused_sm3(learning_rate, cfg)
     chain = []
-    if clip_norm is not None:
-        chain.append(base.clip_by_global_norm(clip_norm))
-    chain.append(scale_by_sm3(variant=variant, accumulator_dtype=accumulator_dtype,
-                              use_pallas=use_pallas))
-    if beta1:
-        chain.append(base.trace(beta1, ema=True))
-    if weight_decay:
-        chain.append(base.add_decayed_weights(weight_decay))
+    if cfg.clip_norm is not None:
+        chain.append(base.clip_by_global_norm(cfg.clip_norm))
+    chain.append(scale_by_sm3(variant=cfg.variant,
+                              accumulator_dtype=cfg.accumulator_dtype,
+                              use_pallas=cfg.use_pallas,
+                              cover_policy=cfg.cover_policy))
+    if cfg.beta1:
+        chain.append(base.trace(cfg.beta1, ema=True))
+    if cfg.weight_decay:
+        chain.append(base.add_decayed_weights(cfg.weight_decay))
     chain.append(base.scale_by_learning_rate(learning_rate))
     return base.chain(*chain)
 
@@ -186,24 +244,28 @@ def sm3(learning_rate: base.ScalarOrSchedule,
 # ---------------------------------------------------------------------------
 # Fused execution mode (the kernels' end-to-end wiring).
 #
-# Dispatch per leaf:
-#   rank ≥ 2, last dim > 1 : merged-2-D kernel path. The tensor is reshaped
-#       (n_1..n_p) → (Π n_{<p}, n_p) — a free view, no transpose — and the
-#       matrix kernel's row accumulator input is the *broadcast min of all
-#       leading co-dim-1 accumulators* (a Θ(Π n_{<p}) precompute, tiny next
-#       to the M×N streams). min(row, col) inside the kernel then equals the
-#       full p-way accumulator min, so ν, u, w', m' are EXACTLY the co-dim-1
-#       cover semantics of the reference; the leading accumulators are
-#       recovered from the kernel's row' output by cheap keepdims maxima.
-#       With ``stacked=True`` (default) all leaves sharing a merged (M, N)
-#       and dtypes are stacked into one (K, M, N) batch and updated by a
-#       single 3-D-grid kernel launch — O(#distinct shapes) launches and
+# Dispatch per leaf, driven by the leaf's cover:
+#   cover.merged_2d_plan(shape) : merged-2-D kernel path. The plan views the
+#       tensor as (M, N) — a free reshape, no transpose — and provides the
+#       kernel's row input (broadcast min of every non-trailing accumulator,
+#       a Θ(M) precompute, tiny next to the M×N streams) and col input (the
+#       trailing accumulator, expanded where the cover is blocked).
+#       min(row, col) inside the kernel then equals the full
+#       min-over-covering-sets, so ν, u, w', m' are EXACTLY the cover
+#       semantics of the reference; the stored accumulators are recovered
+#       from the kernel's row'/col' outputs by the plan's fold (cheap
+#       keepdims/blocked maxima — max is associative). With ``stacked=True``
+#       (default) all leaves sharing a merged (M, N) and dtypes — across
+#       covers — are stacked into one (K, M, N) batch and updated by a
+#       single 3-D-grid kernel launch: O(#distinct shapes) launches and
 #       compilations per step instead of O(#leaves).
-#   rank ≥ 2, last dim == 1 : degenerate column — jnp reference fallback.
-#   rank ≤ 1 : packed (per dtype pair) into one flat 2-D bucket and updated
-#       by a single elementwise kernel launch (full per-element accumulator,
-#       degenerate cover == Adagrad — matching scale_by_sm3) instead of
-#       hundreds of tiny per-leaf launches.
+#   cover.vec_plan(shape) : packed (per dtype pair) into one flat 2-D bucket
+#       and updated by a single elementwise kernel launch. Exact for any
+#       per-element-reducible cover: rank≤1 leaves (full accumulator ==
+#       Adagrad, matching scale_by_sm3), FullCover at any rank, and blocked
+#       vectors (the plan expands/folds the blocked accumulator).
+#   no plan : exact jnp reference fallback per leaf (e.g. co-dim-1 with a
+#       degenerate trailing dim of 1, or custom covers without kernels).
 #
 # With beta1 == 0 every kernel switches to its momentum-free variant
 # (m=None): the momentum buffer is neither streamed in nor out, matching
@@ -213,35 +275,12 @@ def sm3(learning_rate: base.ScalarOrSchedule,
 _BUCKET_LANES = 256
 
 
-def _lead_min(mu: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
-    """Broadcast min of all leading (non-last-axis) accumulators, (R, 1)."""
-    nu = mu[0]
-    for acc in mu[1:-1]:
-        nu = jnp.minimum(nu, acc)
-    return nu.reshape(-1, 1)
-
-
-def _mu_from_2d(row_new: jnp.ndarray, col_new: jnp.ndarray,
-                mu: Tuple[jnp.ndarray, ...], shape) -> Tuple[jnp.ndarray, ...]:
-    """Recover the p co-dim-1 accumulators from the merged-2-D kernel's
-    row'/col' outputs (max is associative, so this is exact)."""
-    p = len(shape)
-    new_last = col_new.reshape(mu[-1].shape)
-    lead_full = row_new.reshape(shape[:-1] + (1,))
-    if p == 2:
-        return (lead_full, new_last)
-    outs = []
-    for a in range(p - 1):
-        axes = tuple(b for b in range(p - 1) if b != a)
-        outs.append(jnp.max(lead_full, axis=axes, keepdims=True))
-    return tuple(outs) + (new_last,)
-
-
-def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
-               weight_decay: float, clip_norm: Optional[float],
-               stacked: bool = True) -> base.FusedGradientTransformation:
-    reference = sm3(learning_rate, beta1=beta1, variant='II',
-                    weight_decay=weight_decay, clip_norm=clip_norm)
+def _fused_sm3(learning_rate: base.ScalarOrSchedule,
+               cfg: SM3Config) -> base.FusedGradientTransformation:
+    reference = sm3(learning_rate,
+                    config=dataclasses.replace(cfg, fused=False))
+    beta1, weight_decay, clip_norm = cfg.beta1, cfg.weight_decay, cfg.clip_norm
+    stacked, policy = cfg.stacked, cfg.policy()
     tags = []
     if clip_norm is not None:
         tags.append('clip')
@@ -252,11 +291,11 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
         tags.append('wd')
     tags.append('lr')
 
-    def _leaf_reference(p, m, g, mu, step_lr, gscale):
+    def _leaf_reference(p, m, g, mu, cover, step_lr, gscale):
         """Exact chain semantics for leaves the kernels don't cover."""
         if clip_norm is not None:
             g = (gscale * g.astype(jnp.float32)).astype(g.dtype)
-        u, new_mu = _update_leaf_ii(g, mu)
+        u, new_mu = _update_leaf_ii(g, mu, cover)
         if beta1:
             new_m = (beta1 * m.astype(jnp.float32)
                      + (1.0 - beta1) * u.astype(jnp.float32)).astype(m.dtype)
@@ -279,7 +318,10 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
         # materialized in HBM
         gscale = 1.0 if clip_norm is None \
             else base.global_norm_clip_scale(grads, clip_norm)
-        flat_g, treedef = jax.tree.flatten(grads)
+        flat_with_path, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        flat_g = [g for _, g in flat_with_path]
+        leaf_covers = [policy.resolve(covers_lib.keystr(p))
+                       for p, _ in flat_with_path]
         flat_p = treedef.flatten_up_to(params)
         flat_mu = treedef.flatten_up_to(st['sm3'].mu)
         flat_m = treedef.flatten_up_to(st['trace'].momentum) if beta1 \
@@ -289,29 +331,34 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
         new_p = [None] * n
         new_m = [None] * n
         new_mu = [None] * n
-        mat_buckets = {}   # (rows, cols, param dtype, grad dtype) -> [i]
-        buckets = {}       # rank≤1: (param dtype, grad dtype) -> [i]
-        for i, (g, p, mu, m) in enumerate(zip(flat_g, flat_p, flat_mu,
-                                              flat_m)):
-            if g.ndim >= 2 and g.shape[-1] > 1:
-                C = g.shape[-1]
+        mat_buckets = {}   # (rows, cols, param dtype, grad dtype) -> [(i, plan)]
+        vec_buckets = {}   # (param dtype, grad dtype) -> [(i, plan)]
+        for i, (g, p, cover) in enumerate(zip(flat_g, flat_p, leaf_covers)):
+            plan = cover.merged_2d_plan(g.shape)
+            if plan is not None:
                 mat_buckets.setdefault(
-                    (g.size // C, C, p.dtype, g.dtype), []).append(i)
-            elif g.ndim >= 2:
-                new_p[i], new_m[i], new_mu[i] = _leaf_reference(
-                    p, m, g, mu, step_lr, gscale)
+                    (plan.rows, plan.cols, p.dtype, g.dtype),
+                    []).append((i, plan))
+                continue
+            vplan = cover.vec_plan(g.shape)
+            if vplan is not None:
+                vec_buckets.setdefault((p.dtype, g.dtype),
+                                       []).append((i, vplan))
             else:
-                buckets.setdefault((p.dtype, g.dtype), []).append(i)
+                new_p[i], new_m[i], new_mu[i] = _leaf_reference(
+                    p, flat_m[i], g, flat_mu[i], cover, step_lr, gscale)
 
-        for (R, C, _, _), idxs in sorted(mat_buckets.items(),
-                                         key=lambda kv: str(kv[0])):
+        for (R, C, _, _), items in sorted(mat_buckets.items(),
+                                          key=lambda kv: str(kv[0])):
             if stacked:
                 # one (K, R, C) launch for the whole shape bucket
+                idxs = [i for i, _ in items]
                 gs = jnp.stack([flat_g[i].reshape(R, C) for i in idxs])
                 ws = jnp.stack([flat_p[i].reshape(R, C) for i in idxs])
-                rows = jnp.stack([_lead_min(flat_mu[i]) for i in idxs])
-                cols = jnp.stack([flat_mu[i][-1].reshape(1, C)
-                                  for i in idxs])
+                rows = jnp.stack([plan.row_in(flat_mu[i])
+                                  for i, plan in items])
+                cols = jnp.stack([plan.col_in(flat_mu[i])
+                                  for i, plan in items])
                 ms = jnp.stack([flat_m[i].reshape(R, C) for i in idxs]) \
                     if beta1 else None
                 out = sm3_ops.sm3_ii_fused_stacked_step(
@@ -321,22 +368,21 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
                     wsn, msn, rown, coln = out
                 else:
                     wsn, rown, coln = out
-                for k, i in enumerate(idxs):
+                for k, (i, plan) in enumerate(items):
                     shape = flat_g[i].shape
                     new_p[i] = wsn[k].reshape(shape)
                     if beta1:
                         new_m[i] = msn[k].reshape(shape)
-                    new_mu[i] = _mu_from_2d(rown[k], coln[k], flat_mu[i],
-                                            shape)
+                    new_mu[i] = plan.fold_out(rown[k], coln[k], flat_mu[i])
             else:
-                for i in idxs:
+                for i, plan in items:
                     g, p, mu = flat_g[i], flat_p[i], flat_mu[i]
                     shape = g.shape
                     g2 = g.reshape(R, C)
                     w2 = p.reshape(R, C)
                     m2 = flat_m[i].reshape(R, C) if beta1 else None
                     out = sm3_ops.sm3_ii_fused_step(
-                        w2, m2, g2, _lead_min(mu), mu[-1].reshape(1, C),
+                        w2, m2, g2, plan.row_in(mu), plan.col_in(mu),
                         step_lr, beta1, wd=weight_decay, gscale=gscale)
                     if beta1:
                         w2n, m2n, row_n, col_n = out
@@ -344,12 +390,14 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
                     else:
                         w2n, row_n, col_n = out
                     new_p[i] = w2n.reshape(shape)
-                    new_mu[i] = _mu_from_2d(row_n, col_n, mu, shape)
+                    new_mu[i] = plan.fold_out(row_n, col_n, mu)
 
-        for _, idxs in sorted(buckets.items(), key=lambda kv: str(kv[0])):
+        for _, items in sorted(vec_buckets.items(), key=lambda kv: str(kv[0])):
+            idxs = [i for i, _ in items]
             gv = jnp.concatenate([flat_g[i].reshape(-1) for i in idxs])
             wv = jnp.concatenate([flat_p[i].reshape(-1) for i in idxs])
-            av = jnp.concatenate([flat_mu[i][0].reshape(-1) for i in idxs])
+            av = jnp.concatenate([plan.expand(flat_mu[i])
+                                  for i, plan in items])
             L = gv.size
             rows = -(-L // _BUCKET_LANES)
             pad = rows * _BUCKET_LANES - L
@@ -373,13 +421,13 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule, beta1: float,
                 mb = None
             wb, ab = wb.reshape(-1), ab.reshape(-1)
             off = 0
-            for i in idxs:
+            for i, plan in items:
                 size = flat_g[i].size
                 sl = slice(off, off + size)
                 new_p[i] = wb[sl].reshape(flat_p[i].shape)
                 if mb is not None:
                     new_m[i] = mb[sl].reshape(flat_p[i].shape)
-                new_mu[i] = (ab[sl].reshape(flat_mu[i][0].shape),)
+                new_mu[i] = plan.fold(ab[sl])
                 off += size
 
         out_state = []

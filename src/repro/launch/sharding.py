@@ -94,36 +94,44 @@ def param_specs(params_shape: PyTree, expert_shard: str = 'tp') -> PyTree:
 
 
 def _key_str(k) -> str:
-    for attr in ('key', 'name'):
-        if hasattr(k, attr):
-            return str(getattr(k, attr))
-    if hasattr(k, 'idx'):
-        return f'#{k.idx}'
-    return str(k)
+    # delegate so cover rules (core.covers) and sharding rules stringify
+    # the same leaf path identically
+    from repro.core.covers import key_str
+    return key_str(k)
 
 
 # --------------------------------------------------------------------------
 # optimizer-state specs (pattern-matched on the state NamedTuples)
 # --------------------------------------------------------------------------
 
-def _sm3_acc_spec(pspec: P, acc_shape: Tuple[int, ...]) -> P:
-    """Accumulator keeping axis a (its only non-1 axis) inherits s_a."""
+def _sm3_acc_spec(pspec: P, acc_shape: Tuple[int, ...],
+                  param_shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Cover accumulators live *with* their slices: every full-size axis of
+    the accumulator inherits the parameter's spec on that axis (co-dim-1
+    accumulators have one such axis; GroupedAxesCover accumulators several).
+    A *blocked* axis (accumulator size ⌈n/b⌉ ≠ n) no longer indexes the
+    parameter 1:1, so it is replicated — blocked statistics are tiny and
+    the gradient max/min for them already crosses shard boundaries."""
     if all(s == 1 for s in acc_shape):          # degenerate
         return P(*(None,) * len(acc_shape))
     entries = []
     for dim, s in enumerate(acc_shape):
-        if s != 1 and dim < len(pspec):
-            entries.append(pspec[dim])
-        else:
-            entries.append(None)
+        keep = s != 1 and dim < len(pspec)
+        if keep and param_shape is not None and s != param_shape[dim]:
+            keep = False                        # blocked along this axis
+        entries.append(pspec[dim] if keep else None)
     return P(*entries)
 
 
-def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree) -> PyTree:
+def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree,
+                    params_shape: Optional[PyTree] = None) -> PyTree:
     """Build a spec tree congruent with the optimizer state.
 
     Handles the chained states produced by core.base.chain over the
-    optimizers in this repo.
+    optimizers in this repo. ``params_shape`` (arrays/ShapeDtypeStructs)
+    enables the blocked-accumulator rule for SM3 covers; without it every
+    non-1 accumulator axis inherits the parameter spec (the co-dim-1
+    behavior, correct for unblocked covers).
     """
     def handle(state):
         if isinstance(state, tuple) and not hasattr(state, '_fields'):
@@ -132,12 +140,20 @@ def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree) -> PyTree:
             return None
         t = type(state).__name__
         if t == 'SM3State':
-            # mu: per-param tuple of co-dim-1 accumulators
-            def leaf_rule(pspec, mu_tuple):
-                return tuple(_sm3_acc_spec(pspec, tuple(acc.shape))
-                             for acc in mu_tuple)
-            mu = jax.tree.map(leaf_rule, pspecs, state.mu,
-                              is_leaf=lambda x: isinstance(x, P))
+            # mu: per-param tuple of cover accumulators
+            if params_shape is None:
+                def leaf_rule(pspec, mu_tuple):
+                    return tuple(_sm3_acc_spec(pspec, tuple(acc.shape))
+                                 for acc in mu_tuple)
+                mu = jax.tree.map(leaf_rule, pspecs, state.mu,
+                                  is_leaf=lambda x: isinstance(x, P))
+            else:
+                def leaf_rule(pspec, pshape, mu_tuple):
+                    shp = tuple(int(s) for s in pshape.shape)
+                    return tuple(_sm3_acc_spec(pspec, tuple(acc.shape), shp)
+                                 for acc in mu_tuple)
+                mu = jax.tree.map(leaf_rule, pspecs, params_shape, state.mu,
+                                  is_leaf=lambda x: isinstance(x, P))
             return sm3_mod.SM3State(mu=mu)
         if t == 'TraceState':
             return type(state)(momentum=pspecs)
@@ -179,7 +195,8 @@ def train_state_specs(state_shape, pspecs) -> PyTree:
         ef = EFState(residual=pspecs)
     return TrainState(step=P(),
                       params=pspecs,
-                      opt_state=opt_state_specs(state_shape.opt_state, pspecs),
+                      opt_state=opt_state_specs(state_shape.opt_state, pspecs,
+                                                params_shape=state_shape.params),
                       ef=ef)
 
 

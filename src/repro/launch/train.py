@@ -40,6 +40,12 @@ def _parse():
                     help='with --fused: per-leaf kernel dispatch (one '
                          'launch per rank>=2 param) instead of stacked '
                          'shape buckets — for comparison runs')
+    ap.add_argument('--cover', default='',
+                    help="SM3 cover for every leaf (e.g. 'blocked:8', "
+                         "'full'); default is the paper's co-dim-1 cover. "
+                         'See repro.core.covers.parse_cover for the spec '
+                         'grammar; per-leaf rules go through '
+                         "OptimizerSpec.extra['cover_rules']")
     ap.add_argument('--compression', default='',
                     choices=['', 'int8'])
     ap.add_argument('--log-every', type=int, default=10)
@@ -73,6 +79,10 @@ def main():
         extra['fused'] = True
         if args.fused_per_leaf:
             extra['stacked'] = False
+    if args.cover:
+        if args.optimizer not in ('sm3', 'sm3-i', 'sm3-ii'):
+            raise SystemExit('--cover is only supported with SM3 optimizers')
+        extra['default_cover'] = args.cover
     opt = make_optimizer(
         OptimizerSpec(name=args.optimizer, learning_rate=args.lr,
                       extra=extra),

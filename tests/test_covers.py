@@ -1,0 +1,483 @@
+"""The first-class Cover API: per-cover parity against the paper's
+pseudocode (GeneralCover), fused-vs-unfused parity under non-default covers,
+Prop.-1 monotonicity (coarser cover ⇒ pointwise-larger ν, smaller state),
+cover-aware memory accounting and sharding specs, the CoverPolicy / SM3Config
+construction surface, and the chain/extra-keys guard rails.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import base
+from repro.core import covers as covers_lib
+from repro.core import memory
+from repro.core.base import OptimizerSpec
+from repro.core.covers import (BlockedCover, Codim1Cover, CoverPolicy,
+                               FullCover, GeneralCover, GroupedAxesCover,
+                               as_cover, cover_memory_ratio, parse_cover)
+from repro.core.registry import make_optimizer
+from repro.core.sm3 import (SM3Config, SM3State, scale_by_sm3, sm3,
+                            sm3_i_reference_step, sm3_ii_reference_step)
+from repro.kernels.sm3 import ops as sm3_ops
+
+ATOL_BF16 = 1e-2
+
+
+def _grad_stream(seed, steps, shape):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(jax.random.fold_in(key, t), shape)
+            for t in range(steps)]
+
+
+def _mixed_params():
+    """Every dispatch class: repeated shapes, rank-3, rank-1/0, bf16,
+    degenerate trailing dim."""
+    k = jax.random.PRNGKey(0)
+
+    def rnd(i, shape, dtype=jnp.float32):
+        return jax.random.normal(jax.random.fold_in(k, i), shape, dtype)
+    return {
+        'layer0': {'w': rnd(0, (48, 40)), 'b': rnd(1, (40,))},
+        'layer1': {'w': rnd(2, (48, 40)), 'b': rnd(3, (40,))},
+        'emb': rnd(4, (64, 24)),
+        'w3d': rnd(5, (3, 20, 36)),
+        'wbf': rnd(6, (33, 40), jnp.bfloat16),
+        'deg': rnd(7, (13, 1)),
+        'scale': jnp.asarray(0.5),
+    }
+
+
+def _grads_like(params, seed, t):
+    leaves, treedef = jax.tree.flatten(params)
+    return treedef.unflatten([
+        jax.random.normal(jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), t), i), p.shape, p.dtype)
+        for i, p in enumerate(leaves)])
+
+
+def _run(tx, params, steps, *, fused, seed=17):
+    # seed 17 matches test_stacked_fused: f32 bit-exactness between two
+    # *different* jitted programs depends on XLA choosing the same FMA
+    # contraction for nu = acc + g² on both sides — which holds for the
+    # repo's pinned parity seeds (a divergent seed shows the same 1-ulp
+    # wobble on the pre-cover codim1 path, so it is not cover-specific)
+    if fused:
+        fn = jax.jit(tx.fused_update)
+    else:
+        def step(g, s, p):
+            upd, s2 = tx.update(g, s, p)
+            return base.apply_updates(p, upd), s2
+        fn = jax.jit(step)
+    s, p = tx.init(params), params
+    for t in range(steps):
+        p, s = fn(_grads_like(params, seed, t), s, p)
+    return p, s
+
+
+def _assert_parity(pa, sa, pb, sb, params, f32_atol=0.0):
+    fa, treedef = jax.tree.flatten(pa)
+    fb = treedef.flatten_up_to(pb)
+    for x, y, p in zip(fa, fb, treedef.flatten_up_to(params)):
+        if p.dtype == jnp.bfloat16:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       atol=ATOL_BF16, rtol=ATOL_BF16)
+        elif f32_atol == 0.0:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=f32_atol, rtol=f32_atol)
+    for x, y in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   atol=ATOL_BF16, rtol=ATOL_BF16)
+
+
+# ---------------------------------------------------------------------------
+# per-cover parity vs the paper pseudocode (GeneralCover reference)
+# ---------------------------------------------------------------------------
+
+COVER_CASES = [
+    ((5, 7), BlockedCover(2)),
+    ((4, 6), BlockedCover((3, 2))),
+    ((3, 4, 5), BlockedCover(2)),
+    ((3, 4, 5), GroupedAxesCover(((0,), (1, 2)))),
+    ((2, 3, 4), GroupedAxesCover(((0, 1), (2,)))),
+    ((6,), BlockedCover(4)),
+    ((5, 7), FullCover()),
+    ((3, 4), Codim1Cover()),
+]
+
+
+@pytest.mark.parametrize('variant', ['I', 'II'])
+@pytest.mark.parametrize('shape,cover', COVER_CASES,
+                         ids=[f'{s}-{c.kind}' for s, c in COVER_CASES])
+def test_cover_matches_general_reference(shape, cover, variant):
+    """The tensor fast path computes exactly the paper's pseudocode over
+    the cover's index sets, for rank-1/2/3 and both variants."""
+    gen = GeneralCover.from_tensor_cover(cover, shape)
+    d = int(np.prod(shape))
+    tx = scale_by_sm3(variant, cover_policy=CoverPolicy(default=cover))
+    state = tx.init({'w': jnp.zeros(shape)})
+    mu_ref = jnp.zeros(gen.k)
+    w_ref = jnp.zeros(d)
+    ref_step = sm3_i_reference_step if variant == 'I' \
+        else sm3_ii_reference_step
+    for g in _grad_stream(3, 4, shape):
+        u, state = tx.update({'w': g}, state, None)
+        w_prev = np.asarray(w_ref)
+        w_ref, mu_ref, _ = ref_step(w_ref, g.reshape(-1), mu_ref, gen, 1.0)
+        np.testing.assert_allclose(-np.asarray(u['w']).reshape(-1),
+                                   np.asarray(w_ref) - w_prev,
+                                   rtol=2e-5, atol=1e-6)
+        mu_flat = np.concatenate([np.asarray(a).reshape(-1)
+                                  for a in state.mu['w']])
+        np.testing.assert_allclose(mu_flat, np.asarray(mu_ref),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_from_blocks_matches_blocked_cover_sets():
+    """GeneralCover.from_blocks (independent slab construction) builds the
+    same index sets, in the same order, as BlockedCover's expansion."""
+    for shape, bs in [((5, 7), 2), ((4, 6), (3, 2)), ((3, 4, 5), 2),
+                      ((7,), 3)]:
+        a = GeneralCover.from_blocks(shape, bs)
+        b = GeneralCover.from_tensor_cover(BlockedCover(bs), shape)
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_general_cover_guards():
+    with pytest.raises(ValueError, match='empty'):
+        GeneralCover([np.array([0, 1]), np.array([], dtype=np.int64)], 2)
+    with pytest.raises(ValueError, match='no sets'):
+        GeneralCover([], 3)
+    with pytest.raises(ValueError, match='cover'):
+        GeneralCover([np.array([0])], 2)  # index 1 uncovered
+
+
+# ---------------------------------------------------------------------------
+# Prop.-1 monotonicity: coarser cover ⇒ pointwise-larger ν, smaller state
+# ---------------------------------------------------------------------------
+
+def test_monotonicity_finer_cover_tighter_nu_more_state():
+    """Fine→coarse chain (each cover's sets contained in the next's):
+    Full ⊑ Grouped ⊑ Codim1 ⊑ Blocked(2) ⊑ Blocked(max). The expanded
+    accumulators must grow pointwise along the chain at every step, and the
+    state sizes must strictly shrink."""
+    shape = (4, 5, 6)
+    chain = [FullCover(), GroupedAxesCover(((0,), (1, 2))), Codim1Cover(),
+             BlockedCover(2), BlockedCover((4, 5, 6))]
+    sizes = [c.state_size(shape) for c in chain]
+    assert sizes == sorted(sizes, reverse=True)
+    assert len(set(sizes)) == len(sizes)  # strictly decreasing
+
+    txs = [scale_by_sm3('II', cover_policy=CoverPolicy(default=c))
+           for c in chain]
+    states = [tx.init({'w': jnp.zeros(shape)}) for tx in txs]
+    for g in _grad_stream(5, 4, shape):
+        states = [tx.update({'w': g}, s, None)[1]
+                  for tx, s in zip(txs, states)]
+        nus = [np.asarray(c.nu_from_mu(s.mu['w'], shape))
+               for c, s in zip(chain, states)]
+        for fine, coarse in zip(nus, nus[1:]):
+            assert (fine <= coarse + 1e-6).all()
+
+
+def test_blocked_with_unit_blocks_is_codim1():
+    shape = (6, 9)
+    assert BlockedCover(1).acc_shapes(shape) == \
+        Codim1Cover().acc_shapes(shape)
+    g = jax.random.normal(jax.random.PRNGKey(0), shape)
+    ta = scale_by_sm3('II', cover_policy=CoverPolicy(default=BlockedCover(1)))
+    tb = scale_by_sm3('II')
+    sa, sb = ta.init({'w': g}), tb.init({'w': g})
+    ua, sa = ta.update({'w': g}, sa, None)
+    ub, sb = tb.update({'w': g}, sb, None)
+    np.testing.assert_array_equal(np.asarray(ua['w']), np.asarray(ub['w']))
+
+
+# ---------------------------------------------------------------------------
+# fused execution under non-default covers
+# ---------------------------------------------------------------------------
+
+BLOCKED_POLICY = CoverPolicy(default=BlockedCover(2))
+GROUPED_POLICY = CoverPolicy(rules=(('w3d', GroupedAxesCover(((0,), (1, 2)))),
+                                    ('emb', 'blocked:8')))
+
+
+@pytest.mark.parametrize('policy,beta1', [
+    (BLOCKED_POLICY, 0.9), (BLOCKED_POLICY, 0.0),
+    (GROUPED_POLICY, 0.9),
+    (CoverPolicy(default=FullCover()), 0.9),
+], ids=['blocked', 'blocked-nomom', 'grouped', 'full'])
+def test_fused_parity_under_cover(policy, beta1):
+    """Stacked fused == per-leaf fused == unfused chain under non-default
+    covers, f32 bit-exact under jit (the plan expansions are exact min/max
+    algebra around the same kernels)."""
+    params = _mixed_params()
+    kw = dict(beta1=beta1, cover_policy=policy)
+    pu, su = _run(sm3(0.1, **kw), params, 8, fused=False)
+    pf, sf = _run(sm3(0.1, fused=True, **kw), params, 8, fused=True)
+    pl, sl = _run(sm3(0.1, fused=True, stacked=False, **kw), params, 8,
+                  fused=True)
+    _assert_parity(pu, su, pf, sf, params)
+    _assert_parity(pu, su, pl, sl, params)
+
+
+def test_fused_launch_counts_per_cover():
+    """The stacked-launch collapse survives non-default covers: blocked
+    keeps the codim1 bucket structure; FullCover folds *everything* into
+    the elementwise buckets (one launch per dtype pair)."""
+    params = _mixed_params()
+    g = _grads_like(params, 3, 0)
+    # codim1 baseline: 4 stacked buckets ((48,40)f32, (64,24)f32,
+    # (60,36)f32 merged rank-3, (33,40)bf16) + 1 vec (f32 rank<=1)
+    for policy, stacked, vec in [
+            (None, 4, 1),
+            (BLOCKED_POLICY, 4, 1),
+            # grouped remaps the rank-3 merged view (60,36)->(3,720): still
+            # its own bucket; 'emb' blocked:8 keeps its (64,24) bucket
+            (GROUPED_POLICY, 4, 1),
+    ]:
+        tx = sm3(0.1, fused=True, cover_policy=policy)
+        sm3_ops.reset_launch_count()
+        jax.eval_shape(tx.fused_update, g, tx.init(params), params)
+        counts = sm3_ops.launch_counts()
+        assert counts.get('stacked') == stacked, (policy, counts)
+        assert counts.get('vec') == vec, (policy, counts)
+
+    tx = sm3(0.1, fused=True, cover_policy=CoverPolicy(default=FullCover()))
+    sm3_ops.reset_launch_count()
+    jax.eval_shape(tx.fused_update, g, tx.init(params), params)
+    counts = sm3_ops.launch_counts()
+    assert 'stacked' not in counts and 'fused' not in counts
+    assert counts.get('vec') == 2  # one f32 bucket + one bf16 bucket
+    assert sm3_ops.launch_count() == 2
+
+
+def test_grouped_merged_shape_buckets_with_same_shape_leaves():
+    """Two same-shape leaves under *different* covers still share one
+    stacked launch when their merged (M, N) views coincide."""
+    params = {'a': jnp.ones((4, 6, 8)), 'b': jnp.ones((4, 6, 8))}
+    policy = CoverPolicy(rules=(('a', GroupedAxesCover(((0, 1), (2,)))),))
+    tx = sm3(0.1, fused=True, cover_policy=policy)
+    sm3_ops.reset_launch_count()
+    jax.eval_shape(tx.fused_update, _grads_like(params, 1, 0),
+                   tx.init(params), params)
+    # 'a' grouped (0,1)|(2,) and 'b' codim1 both merge to (24, 8)
+    assert sm3_ops.launch_counts().get('stacked') == 1
+    assert sm3_ops.launch_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# memory accounting + sharding specs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('policy', [None, BLOCKED_POLICY, GROUPED_POLICY,
+                                    CoverPolicy(default=FullCover())],
+                         ids=['codim1', 'blocked', 'grouped', 'full'])
+def test_analytic_memory_matches_materialized(policy):
+    params = _mixed_params()
+    tx = sm3(0.1, cover_policy=policy)
+    state = tx.init(params)
+    sm3_state = next(s for s in state if isinstance(s, SM3State))
+    trace_state = next(s for s in state if isinstance(s, base.TraceState))
+    # bf16 leaves: momentum is stored in the param dtype, so compare the
+    # analytic f32 model against an all-f32 tree
+    f32 = all(p.dtype == jnp.float32 for p in jax.tree.leaves(params)
+              if hasattr(p, 'dtype'))
+    analytic_acc = memory.sm3_accumulator_elems(params, cover_policy=policy)
+    assert analytic_acc * 4 == base.tree_bytes(sm3_state.mu)
+    if f32:
+        total = memory.optimizer_state_bytes('sm3', params, beta1=0.9,
+                                             cover_policy=policy)
+        assert total == base.tree_bytes(sm3_state.mu) + \
+            base.tree_bytes(trace_state.momentum)
+
+
+def test_cover_memory_ratio_per_cover():
+    shape = (64, 64)
+    assert cover_memory_ratio(shape, FullCover()) == 1.0
+    assert cover_memory_ratio(shape) == 64 * 64 / 128  # codim1 default
+    assert cover_memory_ratio(shape, BlockedCover(8)) == 64 * 64 / 16
+    r3 = (8, 4, 16)
+    assert cover_memory_ratio(r3, GroupedAxesCover(((0,), (1, 2)))) == \
+        8 * 4 * 16 / (8 + 64)
+
+
+def test_opt_state_specs_cover_aware():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shr
+
+    params = {'w': jax.ShapeDtypeStruct((8, 16), jnp.float32),
+              'e': jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)}
+    pspecs = {'w': P('data', 'model'), 'e': P(None, 'data', 'model')}
+    policy = CoverPolicy(rules=(
+        ('w', BlockedCover((1, 4))),
+        ('e', GroupedAxesCover(((0,), (1, 2)))),
+    ))
+    tx = sm3(0.1, cover_policy=policy)
+    state_shape = jax.eval_shape(tx.init, params)
+    specs = shr.opt_state_specs(state_shape, pspecs, params_shape=params)
+    mu = specs[0].mu
+    # 'w': row acc (8,1) index-aligned -> inherits 'data'; col acc blocked
+    # (1,4) != 16 -> replicated
+    assert mu['w'][0] == P('data', None)
+    assert mu['w'][1] == P(None, None)
+    # 'e' grouped: lead acc (4,1,1) aligned with an unsharded axis; tail acc
+    # (1,8,16) inherits both sharded axes
+    assert mu['e'][0] == P(None, None, None)
+    assert mu['e'][1] == P(None, 'data', 'model')
+
+
+# ---------------------------------------------------------------------------
+# construction surface: SM3Config, CoverPolicy, registry validation, chain
+# ---------------------------------------------------------------------------
+
+def test_sm3config_equals_legacy_kwargs():
+    params = {'w': jnp.ones((6, 8)), 'b': jnp.ones((5,))}
+    ta = sm3(0.1, beta1=0.5, weight_decay=0.01, fused=True)
+    tb = sm3(0.1, config=SM3Config(beta1=0.5, weight_decay=0.01, fused=True))
+    pa, sa = _run(ta, params, 3, fused=True)
+    pb, sb = _run(tb, params, 3, fused=True)
+    _assert_parity(pa, sa, pb, sb, params)
+
+
+def test_sm3config_rejects_mixed_styles():
+    with pytest.raises(ValueError, match='not both'):
+        sm3(0.1, beta1=0.5, config=SM3Config())
+
+
+def test_chain_preserves_sole_fused_member():
+    tx = sm3(0.1, fused=True)
+    assert base.chain(tx) is tx
+    assert getattr(base.chain(tx), 'fused_update', None) is not None
+
+
+def test_chain_rejects_fused_composition():
+    tx = sm3(0.1, fused=True)
+    with pytest.raises(ValueError, match='FusedGradientTransformation'):
+        base.chain(tx, base.scale_by_learning_rate(0.1))
+    with pytest.raises(ValueError, match='FusedGradientTransformation'):
+        base.chain(base.clip_by_global_norm(1.0), tx)
+
+
+def test_make_optimizer_rejects_unknown_extra():
+    spec = OptimizerSpec(name='sm3', learning_rate=0.1,
+                         extra={'fusd': True})  # the motivating typo
+    with pytest.raises(ValueError, match="'fusd'"):
+        make_optimizer(spec)
+    # fused is sm3-only: on adam it must raise, not silently no-op
+    with pytest.raises(ValueError, match="'fused'"):
+        make_optimizer(OptimizerSpec(name='adam', extra={'fused': True}))
+    # known keys still pass
+    make_optimizer(OptimizerSpec(name='sm3', extra={
+        'fused': True, 'default_cover': 'blocked:4',
+        'cover_rules': [('emb', 'full')], 'warmup_steps': 5}))
+
+
+def test_parse_cover_specs():
+    assert as_cover(None) == Codim1Cover()
+    assert parse_cover('codim1') == Codim1Cover()
+    assert parse_cover('full') == FullCover()
+    assert parse_cover('blocked:8') == BlockedCover(8)
+    assert parse_cover('blocked:2x4') == BlockedCover((2, 4))
+    assert parse_cover('grouped:0|1,2') == GroupedAxesCover(((0,), (1, 2)))
+    with pytest.raises(ValueError, match='unknown cover spec'):
+        parse_cover('bloked:8')
+    with pytest.raises(TypeError):
+        as_cover(42)
+
+
+def test_grouped_cover_validation():
+    with pytest.raises(ValueError, match='contiguous'):
+        GroupedAxesCover(((0,), (2,)))  # gap
+    with pytest.raises(ValueError, match='contiguous'):
+        GroupedAxesCover(((1, 0),))     # out of order
+    with pytest.raises(ValueError, match='rank'):
+        GroupedAxesCover(((0,), (1, 2))).acc_shapes((4, 5))
+
+
+def test_cover_policy_resolution_order():
+    pol = CoverPolicy(rules=(('attn/w[qkv]$', 'full'), ('attn', 'blocked:2')),
+                      default='codim1')
+    assert pol.resolve('blocks/p0/attn/wq') == FullCover()
+    assert pol.resolve('blocks/p0/attn/wo') == BlockedCover(2)
+    assert pol.resolve('mlp/w_in') == Codim1Cover()
+    assert 'blocked' in pol.describe()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: training + checkpoint round-trip across cover policies
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(extra):
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.train import trainer
+    cfg, _ = get_config('transformer-big')
+    cfg = cfg.reduced(d_model=32, d_ff=64, n_repeats=1, vocab=128, seq=16)
+    opt = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.2,
+                                       extra={'warmup_steps': 2, **extra}))
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4))
+    return cfg, opt, ds, trainer
+
+
+@pytest.mark.parametrize('extra', [
+    {'fused': True, 'default_cover': 'blocked:4'},
+    {'fused': True, 'cover_rules': [
+        ('attn/w[qkvo]|mlp/w_', 'grouped:0|1,2')]},
+], ids=['blocked', 'grouped'])
+def test_fused_cover_trains_end_to_end(extra):
+    """Acceptance: non-default covers train through the fused *stacked*
+    kernel path end to end — stacked launches engaged, loss finite and
+    improving, analytic memory matching the materialized state."""
+    cfg, opt, ds, trainer = _tiny_setup(extra)
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt)
+
+    grads_shape = jax.eval_shape(lambda: state.params)
+    g = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), grads_shape)
+    sm3_ops.reset_launch_count()
+    jax.eval_shape(opt.fused_update, g, state.opt_state, state.params)
+    counts = sm3_ops.launch_counts()
+    assert counts.get('stacked', 0) >= 1, counts  # the stacked kernel path
+
+    policy = CoverPolicy(
+        rules=tuple((p, as_cover(c)) for p, c in extra.get('cover_rules',
+                                                           ())),
+        default=as_cover(extra.get('default_cover')))
+    sm3_state = next(s for s in state.opt_state if isinstance(s, SM3State))
+    assert memory.sm3_accumulator_elems(state.params, policy) * 4 == \
+        base.tree_bytes(sm3_state.mu)
+
+    _, hist = trainer.train_loop(cfg, opt, ds, steps=4, state=state,
+                                 log_every=1)
+    losses = [h['loss'] for h in hist]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_roundtrip_across_cover_policy(tmp_path):
+    """Kill-and-restart with a non-default cover policy == uninterrupted
+    run: the cover-shaped state round-trips through the checkpoint manager
+    exactly."""
+    from repro.checkpoint.manager import CheckpointManager
+    cfg, opt, ds, trainer = _tiny_setup(
+        {'fused': True, 'default_cover': 'blocked:4'})
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt)
+    mgr = CheckpointManager(str(tmp_path))
+
+    s_full, h_full = trainer.train_loop(cfg, opt, ds, steps=6, state=state,
+                                        log_every=1)
+    s_a, _ = trainer.train_loop(cfg, opt, ds, steps=3, state=state,
+                                log_every=1)
+    mgr.save(3, s_a)
+    s_b = mgr.restore(3, s_a)
+    s_res, h_res = trainer.train_loop(cfg, opt, ds, steps=6, state=s_b,
+                                      log_every=1)
+    np.testing.assert_allclose(h_full[-1]['loss'], h_res[-1]['loss'],
+                               rtol=1e-6)
+    for x, y in zip(jax.tree.leaves(s_full.params),
+                    jax.tree.leaves(s_res.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
