@@ -38,15 +38,24 @@ def emit_csv(rows: List[Dict], header: List[str]) -> None:
 def emit_json(name: str, rows: List[Dict],
               meta: Optional[Dict] = None) -> str:
     """Write rows as ``$BENCH_OUT/<name>.json`` (default experiments/bench)
-    so BENCH_* trackers can diff runs without parsing stdout CSV. Returns
-    the path written."""
+    so BENCH_* trackers can diff runs without parsing stdout CSV, and
+    mirror them to repo-root ``BENCH_<name>.json`` — the file the perf
+    trajectory accumulates in CI (set ``BENCH_ROOT=0`` to skip the
+    mirror). Returns the $BENCH_OUT path written."""
     out_dir = os.environ.get('BENCH_OUT', 'experiments/bench')
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f'{name}.json')
+    payload = {'benchmark': name, **(meta or {}), 'rows': rows}
     with open(path, 'w') as f:
-        json.dump({'benchmark': name, **(meta or {}), 'rows': rows}, f,
-                  indent=1, sort_keys=True)
+        json.dump(payload, f, indent=1, sort_keys=True)
     print(f'# json: {path}')
+    if os.environ.get('BENCH_ROOT', '1') not in ('0', 'false', 'no'):
+        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(
+            __file__)))
+        root_path = os.path.join(repo_root, f'BENCH_{name}.json')
+        with open(root_path, 'w') as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f'# json: {root_path}')
     return path
 
 

@@ -132,6 +132,18 @@ def optimizer_stream_rows(archs=None):
             'leaves': len(leaves),
             'launches_per_leaf': n_mat + vec_buckets,
             'launches_stacked': len(mat_buckets) + vec_buckets,
+            # arena layout: one ragged launch per mat dtype + one vec
+            # launch per dtype — independent of shape diversity
+            'launches_arena': len({k[2] for k in mat_buckets})
+            + vec_buckets,
+            # per-step *model-sized* state bytes copied purely for layout
+            # (momentum stack+unstack, β1 > 0 assumed like the stream
+            # model): the arena keeps it packed across steps. Matches
+            # step_time's packed_copy_bytes definition — the Θ(acc)
+            # row/col derive/fold is excluded (every layout pays it;
+            # step_time counts it separately as the 'acc' kind)
+            'stacked_state_copy_bytes': 2 * p_bytes,
+            'arena_state_copy_bytes': 0,
             'peak_extra_unfused_bytes': 3 * p_bytes + acc_bytes,
             'peak_extra_fused_bytes': 2 * p_bytes,
             'peak_extra_fused_inplace_bytes': 3 * max_bucket,
@@ -143,6 +155,8 @@ STREAM_HEADER = ['arch', 'param_bytes', 'sm3_acc_bytes',
                  'unfused_update_bytes', 'fused_update_bytes',
                  't_unfused_ms', 't_fused_ms', 'speedup',
                  'leaves', 'launches_per_leaf', 'launches_stacked',
+                 'launches_arena', 'stacked_state_copy_bytes',
+                 'arena_state_copy_bytes',
                  'peak_extra_unfused_bytes', 'peak_extra_fused_bytes',
                  'peak_extra_fused_inplace_bytes']
 

@@ -1,5 +1,10 @@
 """Benchmark runner: one module per paper table/figure. Each prints a CSV.
 
+Modules that emit JSON (step_time, covers, roofline streams, autotune) do
+so twice per run: ``$BENCH_OUT/<name>.json`` (default experiments/bench,
+untracked) and a repo-root ``BENCH_<name>.json`` mirror — the tracked
+perf-trajectory files CI asserts on and uploads as artifacts.
+
   table1_memory     Table 1 — Transformer-Big optimizer memory
   table2_memory     Table 2 — BERT-Large memory vs batch
   fig2_convergence  Fig. 2  — convergence @ fixed & doubled batch

@@ -12,9 +12,13 @@ per-leaf dispatch, one launch per rank≥2 param), timed against the unfused
 sm3 transformation chain recorded alongside them. Every row also reports
 ``launches`` — the number of Pallas kernel launches one update issues
 (counted at trace time; 0 for pure-jnp optimizers) — so the O(#leaves) →
-O(#distinct shapes) collapse is visible in the trajectory. A JSON copy of
-the table lands in $BENCH_OUT (default experiments/bench) for BENCH_*
-tracking.
+O(#distinct shapes) collapse is visible in the trajectory, and
+``packed_copy_bytes`` — the optimizer-state bytes each update copies
+purely for layout (stack/unstack), which ``--layout arena`` (the
+persistent-arena row, ragged kernel, ≤ 2 launches per dtype) drives to
+zero. A JSON copy of the table lands in $BENCH_OUT (default
+experiments/bench) and is mirrored to repo-root ``BENCH_step_time.json``
+for the accumulating perf trajectory.
 """
 from __future__ import annotations
 
@@ -38,20 +42,26 @@ FUSED_SPEC = dataclasses.replace(
 FUSED_PER_LEAF_SPEC = dataclasses.replace(
     PAPER_OPTS['sm3'], extra={**PAPER_OPTS['sm3'].extra, 'fused': True,
                               'stacked': False})
+ARENA_SPEC = dataclasses.replace(
+    PAPER_OPTS['sm3'], extra={**PAPER_OPTS['sm3'].extra, 'layout': 'arena'})
 
-HEADER = ['optimizer', 'train_step_us', 'update_apply_us', 'launches']
+HEADER = ['optimizer', 'train_step_us', 'update_apply_us', 'launches',
+          'packed_copy_bytes']
 
 
-def _count_launches(opt, grads, opt_state, params) -> int:
-    """Pallas launches one update+apply issues: abstract-trace the update
-    and read the ops-layer counter (one wrapper call == one launch)."""
+def _trace_counters(opt, grads, opt_state, params):
+    """(launches, packed_copy_bytes) one update+apply issues:
+    abstract-trace the update and read the ops-layer counters (one wrapper
+    call == one launch; packed_copy_bytes counts optimizer-*state* bytes
+    stacked/unstacked purely for layout — 0 in arena mode)."""
     sm3_ops.reset_launch_count()
+    sm3_ops.reset_copy_bytes()
     jax.eval_shape(lambda g, s, p: opt_base.apply_gradients(opt, g, s, p),
                    grads, opt_state, params)
-    return sm3_ops.launch_count()
+    return sm3_ops.launch_count(), sm3_ops.packed_copy_bytes()
 
 
-def run(include_fused: bool = False):
+def run(include_fused: bool = False, include_arena: bool = False):
     cfg = small_lm(d_model=256, d_ff=1024, n_repeats=2, vocab=2048, seq=64)
     rows = []
     ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
@@ -63,10 +73,13 @@ def run(include_fused: bool = False):
     names = ['adam', 'adagrad', 'adafactor', 'sm3']
     if include_fused:
         names.extend(['sm3-fused', 'sm3-fused-per-leaf'])
+    if include_arena:
+        names.append('sm3-fused-arena')
     names.append('sgd')
     for name in names:
         spec = {'sm3-fused': FUSED_SPEC,
-                'sm3-fused-per-leaf': FUSED_PER_LEAF_SPEC}.get(
+                'sm3-fused-per-leaf': FUSED_PER_LEAF_SPEC,
+                'sm3-fused-arena': ARENA_SPEC}.get(
                     name, PAPER_OPTS.get(name))
         opt = make_optimizer(spec, d_model=cfg.d_model)
         state = trainer.init_state(jax.random.PRNGKey(0), cfg, opt)
@@ -80,11 +93,12 @@ def run(include_fused: bool = False):
         upd = jax.jit(lambda g, s, p, _o=opt: opt_base.apply_gradients(
             _o, g, s, p))
         upd_us = time_fn(upd, grads, opt_state, params, warmup=2, iters=8)
+        launches, copied = _trace_counters(opt, grads, opt_state, params)
         rows.append({'optimizer': name,
                      'train_step_us': round(full_us),
                      'update_apply_us': round(upd_us),
-                     'launches': _count_launches(opt, grads, opt_state,
-                                                 params)})
+                     'launches': launches,
+                     'packed_copy_bytes': copied})
     return rows
 
 
@@ -95,15 +109,30 @@ def main(argv=None):
     ap.add_argument('--fused', action='store_true',
                     help='also record the fused SM3-II execution mode '
                          '(stacked and per-leaf dispatch)')
+    ap.add_argument('--layout', default='',
+                    choices=['', 'arena', 'stacked', 'per_leaf'],
+                    help='fused layouts to record (same grammar as '
+                         "launch/train.py --layout): 'stacked'/'per_leaf' "
+                         'record both fused rows (like --fused); '
+                         "'arena' additionally records the persistent-"
+                         'arena row (ragged kernel, zero per-step state '
+                         'repacking)')
     args = ap.parse_args(argv or [])
-    rows = run(include_fused=args.fused)
+    include_fused = args.fused or bool(args.layout)
+    rows = run(include_fused=include_fused,
+               include_arena=args.layout == 'arena')
     emit_csv(rows, HEADER)
-    emit_json('step_time', rows, meta={'fused': bool(args.fused)})
+    # meta mirrors the recorded row set, not the flag spelling ('stacked'
+    # and 'per_leaf' record identical rows) — identical runs must produce
+    # identical tracked BENCH trajectory files
+    emit_json('step_time', rows,
+              meta={'fused': bool(include_fused),
+                    'layout': 'arena' if args.layout == 'arena' else ''})
     by = {r['optimizer']: r for r in rows}
     ratio = by['sm3']['update_apply_us'] / by['adam']['update_apply_us']
     print(f"# SM3 update / Adam update = {ratio:.2f} "
           f"(paper: SM3 slightly faster per step on TPU)")
-    if args.fused:
+    if include_fused:
         fr = by['sm3-fused']['update_apply_us'] / by['sm3']['update_apply_us']
         print(f"# fused SM3 update / unfused SM3 update = {fr:.2f} "
               f"(CPU interpret mode — correctness wiring; the HBM-stream "
@@ -111,6 +140,13 @@ def main(argv=None):
         print(f"# launches: stacked {by['sm3-fused']['launches']} vs "
               f"per-leaf {by['sm3-fused-per-leaf']['launches']} "
               f"(O(#distinct shapes) vs O(#leaves))")
+    if args.layout == 'arena':
+        ar = by['sm3-fused-arena']
+        print(f"# arena: {ar['launches']} launches "
+              f"(<= 2 per dtype, ragged kernel), packed_copy_bytes "
+              f"{ar['packed_copy_bytes']} (stacked: "
+              f"{by['sm3-fused']['packed_copy_bytes']}) — persistent "
+              f"state, zero per-step repacking")
 
 
 if __name__ == '__main__':

@@ -12,6 +12,11 @@ Design (DESIGN.md §7):
     different mesh shape, device count, or sharding — via device_put;
   * ``latest_step`` skips incomplete/corrupt directories, so auto-resume
     after preemption always lands on a valid state.
+  * arena-agnostic: states holding packed arena nodes (core.arena —
+    ``ArenaSM3State`` / ``ArenaParams``) are saved as their *logical*
+    per-leaf pytree and re-packed on restore, so checkpoints round-trip
+    freely between the arena and per-leaf layouts (an arena run can
+    resume a per-leaf checkpoint and vice versa).
 
 Format: one .npz per checkpoint (flattened path→array) + meta.json.
 """
@@ -29,6 +34,20 @@ import numpy as np
 PyTree = Any
 
 _SEP = '/'
+
+
+def _arena_mod():
+    """core.arena iff it is already loaded (else None). Arena nodes can
+    only exist in a state if core.arena imported successfully first, so a
+    plain sys.modules check keeps the manager decoupled from the optimizer
+    stack for states that hold none."""
+    import sys
+    return sys.modules.get('repro.core.arena')
+
+
+def _logical_view(state: PyTree) -> PyTree:
+    arena = _arena_mod()
+    return state if arena is None else arena.logical_tree(state)
 
 
 def _flatten(tree: PyTree):
@@ -61,6 +80,9 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
 
     def save(self, step: int, state: PyTree, blocking: bool = True) -> None:
+        # arena nodes are stored as their logical per-leaf view (identity
+        # when the state has none) — keeps the on-disk format layout-free
+        state = _logical_view(state)
         # snapshot to host on the caller thread (device buffers may mutate)
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                   state)
@@ -122,7 +144,34 @@ class CheckpointManager:
     def restore(self, step: int, template: PyTree) -> PyTree:
         """Restore onto ``template`` (arrays or ShapeDtypeStructs with
         .sharding). Elastic: the stored logical arrays are device_put with
-        the template's sharding — any mesh shape works."""
+        the template's sharding — any mesh shape works. Arena nodes in the
+        template are matched through their logical per-leaf view and
+        re-packed, so a checkpoint written by any layout restores onto any
+        other."""
+        arena = _arena_mod()
+        if arena is not None and any(
+                arena.is_arena_node(x) for x in jax.tree_util.tree_leaves(
+                    template, is_leaf=arena.is_arena_node)):
+            # Non-arena leaves keep their shardings through
+            # logical_template, so the inner restore places them directly;
+            # only the arena nodes re-pack and need re-placement. Caveat:
+            # the arena portion stages unsharded on the default device
+            # before the device_put (a streaming arena restore is future
+            # work — fine at current scales, the state is the small part).
+            logical = self.restore(step, arena.logical_template(template))
+            packed = arena.pack_like(template, logical)
+
+            def _place(t, x):
+                if not arena.is_arena_node(t):
+                    return x  # already placed by the inner restore
+                def put(tl, xl):
+                    sharding = getattr(tl, 'sharding', None)
+                    if sharding is not None and not callable(sharding):
+                        return jax.device_put(xl, sharding)
+                    return xl
+                return jax.tree.map(put, t, x)
+            return jax.tree.map(_place, template, packed,
+                                is_leaf=arena.is_arena_node)
         path = os.path.join(self.dir, f'step_{step:08d}', 'state.npz')
         data = np.load(path)
         flat_t, treedef = _flatten(template)

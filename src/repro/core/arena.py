@@ -1,0 +1,718 @@
+"""Persistent state arena for the fused SM3 execution mode (layout='arena').
+
+The stacked fused path (PR 2/3) rebuilds its kernel operands every step:
+``jnp.stack`` packs the per-leaf state into (K, M, N) buckets before the
+launch and the outputs are scattered back — ~2 full-model HBM round trips
+that exist only to change layout. This module makes the packed layout
+*persistent* instead: at ``init`` time an :class:`ArenaPlan` lays every
+leaf's optimizer state out into a small number of flat per-dtype arenas
+with **static** offset/shape tables, so the state stays packed across
+steps and is updated in place (via the kernels' ``input_output_aliases``
+plus train-loop donation). Nothing model-sized is ever stacked/unstacked
+for the state again.
+
+Arena layout per parameter-dtype bucket:
+
+* **tile arena** ``(T, bm, bn)`` — every rank>=2 leaf's merged-2-D view
+  (from its cover's ``merged_2d_plan``), padded to the bucket tile and cut
+  into row-major ``(bm, bn)`` tiles, concatenated leaf-major / row-major /
+  column-minor. Momentum lives here persistently; gradients (and params,
+  unless arena-resident) are packed into the same layout once per step.
+  The ragged kernel (kernels.sm3) walks a 1-D grid over ``T`` and resolves
+  each tile's (leaf, row-block, col-block) from prefix-sum tables handed
+  over as scalar-prefetch operands — one launch per dtype, independent of
+  how many distinct shapes the bucket mixes.
+* **acc arena** ``(acc_elems,)`` f32 — the *logical* cover accumulators of
+  every bucket leaf, concatenated flat. Per step the Θ(Σ(M+N))-sized
+  kernel row/col operands are derived from it (the cover plans' exact
+  ``row_in``/``col_in``) and folded back (``fold_out``) — O(state) work,
+  negligible next to the M×N streams, and it is what keeps every cover's
+  semantics exact (a rank-3 co-dim-1 leaf cannot persist its merged row
+  statistic without changing the cover).
+* **vec arena** ``(rows, LANES)`` — rank<=1 / per-element covers, packed
+  flat; the accumulator (and momentum) live here persistently and the
+  existing elementwise kernel updates them in place.
+
+Leaves whose cover has no kernel plan (or a non-identity vec fold, e.g.
+blocked vectors) keep per-leaf state and ride the exact jnp reference.
+
+The state object (:class:`ArenaSM3State`) is a registered pytree whose
+aux data *is* the plan, so jit caching, donation, and tree mapping all see
+a stable static structure.  :func:`to_logical` / :func:`from_logical`
+convert to/from the unfused chain's state pytree — checkpoints stay
+round-trip compatible with the per-leaf layout in both directions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import base
+from repro.core import covers as covers_lib
+
+PyTree = Any
+Shape = Tuple[int, ...]
+
+LANES = 256  # vec-bucket lane width (matches the elementwise kernel)
+
+# Arena leading axes (tile count, vec rows) are rounded up to this so the
+# flat axis divides any data-axis mesh size that divides the quantum —
+# device_put with a NamedSharding requires exact divisibility. The default
+# of 8 covers data axes of 1/2/4/8; for wider data meshes set
+# REPRO_ARENA_SHARD_QUANTUM to (a multiple of) the data-axis size before
+# building the plan. Dummy tiles carry zeros and are routed to a scratch
+# accumulator slot; zero padding is inert under the SM3 max/min algebra.
+SHARD_QUANTUM = 8
+
+
+def _shard_quantum() -> int:
+    import os
+    q = int(os.environ.get('REPRO_ARENA_SHARD_QUANTUM', SHARD_QUANTUM))
+    if q < 1:
+        raise ValueError(f'REPRO_ARENA_SHARD_QUANTUM must be >= 1, got {q}')
+    return q
+
+
+def _nelems(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _ceil_div(n: int, b: int) -> int:
+    return -(-int(n) // int(b))
+
+
+# ---------------------------------------------------------------------------
+# static plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatLeaf:
+    """Offset/shape table entry for one merged-2-D leaf in a tile arena."""
+    idx: int                      # position in the flattened param tree
+    shape: Shape                  # original leaf shape
+    rows: int                     # merged (M, N) view
+    cols: int
+    gm: int                       # row/col tile-grid extents
+    gn: int
+    tile0: int                    # first tile index in the bucket arena
+    rowtile0: int                 # first row-accumulator tile index
+    coltile0: int                 # first col-accumulator tile index
+    acc_off: int                  # element offset into the bucket acc arena
+    acc_sizes: Tuple[int, ...]    # per-accumulator element counts
+
+    @property
+    def tiles(self) -> int:
+        return self.gm * self.gn
+
+
+@dataclasses.dataclass(frozen=True)
+class MatBucket:
+    """One per-dtype tile arena: every merged-2-D leaf of that dtype."""
+    wdtype: str
+    bm: int
+    bn: int
+    leaves: Tuple[MatLeaf, ...]
+    tiles: int                    # T  = Σ gm·gn (real tiles)
+    rowtiles: int                 # Tr = Σ gm
+    coltiles: int                 # Tc = Σ gn
+    acc_elems: int
+    tiles_pad: int = 0            # arena extent: tiles rounded up to the
+                                  # shard quantum (>= tiles)
+
+    @property
+    def has_pad(self) -> bool:
+        return self.tiles_pad > self.tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class VecLeaf:
+    idx: int
+    shape: Shape
+    off: int                      # element offset into the flat vec bucket
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VecBucket:
+    wdtype: str
+    leaves: Tuple[VecLeaf, ...]
+    elems: int
+    rows: int                     # padded (rows, LANES) arena extent
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaPlan:
+    """Static arena layout — hashable, so it can live in pytree aux data
+    (stable jit keys; states from independent inits compare tree-equal)."""
+    treedef: Any                  # params treedef
+    covers: Tuple[covers_lib.Cover, ...]
+    shapes: Tuple[Shape, ...]
+    dtypes: Tuple[str, ...]       # param (== momentum) dtype per leaf
+    mat: Tuple[MatBucket, ...]
+    vec: Tuple[VecBucket, ...]
+    fallback: Tuple[int, ...]     # leaf indices on the jnp reference path
+    tags: Tuple[str, ...]         # chain stages of the logical state
+    beta1: float
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+
+def _is_identity_vec(cover: covers_lib.Cover, shape: Shape) -> bool:
+    """True when the vec plan's expand/fold are pure reshapes — the stored
+    accumulator *is* the per-element ν, so it can persist in the arena."""
+    if cover.vec_plan(shape) is None:
+        return False
+    accs = cover.acc_shapes(shape)
+    return len(accs) == 1 and _nelems(accs[0]) == max(_nelems(shape), 1)
+
+
+def plan_arena(params: PyTree, policy: covers_lib.CoverPolicy,
+               tags: Tuple[str, ...], beta1: float,
+               choose_tiles=None) -> ArenaPlan:
+    """Lay out the arenas for a parameter tree (arrays or ShapeDtypeStructs).
+
+    ``choose_tiles(extents, dtype, momentum) -> (bm, bn)`` picks the bucket
+    tile (default: kernels.sm3.tuning.choose_ragged_tiles).
+    """
+    if choose_tiles is None:
+        from repro.kernels.sm3 import tuning
+        choose_tiles = tuning.choose_ragged_tiles
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    covers = tuple(policy.resolve(covers_lib.keystr(p)) for p, _ in flat)
+    shapes = tuple(tuple(int(s) for s in leaf.shape) for _, leaf in flat)
+    dtypes = tuple(jnp.dtype(leaf.dtype).name for _, leaf in flat)
+
+    mat_groups: Dict[str, List[int]] = {}
+    vec_groups: Dict[str, List[int]] = {}
+    fallback: List[int] = []
+    for i, (cover, shape) in enumerate(zip(covers, shapes)):
+        if cover.merged_2d_plan(shape) is not None:
+            mat_groups.setdefault(dtypes[i], []).append(i)
+        elif _is_identity_vec(cover, shape):
+            vec_groups.setdefault(dtypes[i], []).append(i)
+        else:
+            fallback.append(i)
+
+    quantum = _shard_quantum()
+    mat_buckets = []
+    for wdtype in sorted(mat_groups):
+        idxs = mat_groups[wdtype]
+        extents = []
+        for i in idxs:
+            p2 = covers[i].merged_2d_plan(shapes[i])
+            extents.append((p2.rows, p2.cols))
+        bm, bn = choose_tiles(tuple(extents), wdtype,
+                              momentum=bool(beta1))
+        leaves, t0, r0, c0, aoff = [], 0, 0, 0, 0
+        for i, (M, N) in zip(idxs, extents):
+            gm, gn = _ceil_div(M, bm), _ceil_div(N, bn)
+            acc_sizes = tuple(_nelems(s)
+                              for s in covers[i].acc_shapes(shapes[i]))
+            leaves.append(MatLeaf(idx=i, shape=shapes[i], rows=M, cols=N,
+                                  gm=gm, gn=gn, tile0=t0, rowtile0=r0,
+                                  coltile0=c0, acc_off=aoff,
+                                  acc_sizes=acc_sizes))
+            t0 += gm * gn
+            r0 += gm
+            c0 += gn
+            aoff += sum(acc_sizes)
+        mat_buckets.append(MatBucket(wdtype=wdtype, bm=bm, bn=bn,
+                                     leaves=tuple(leaves), tiles=t0,
+                                     rowtiles=r0, coltiles=c0,
+                                     acc_elems=aoff,
+                                     tiles_pad=_ceil_div(t0, quantum)
+                                     * quantum))
+
+    vec_buckets = []
+    for wdtype in sorted(vec_groups):
+        idxs = vec_groups[wdtype]
+        leaves, off = [], 0
+        for i in idxs:
+            size = max(_nelems(shapes[i]), 1)
+            leaves.append(VecLeaf(idx=i, shape=shapes[i], off=off, size=size))
+            off += size
+        vec_buckets.append(VecBucket(
+            wdtype=wdtype, leaves=tuple(leaves), elems=off,
+            rows=_ceil_div(_ceil_div(off, LANES), quantum) * quantum))
+
+    return ArenaPlan(treedef=treedef, covers=covers, shapes=shapes,
+                     dtypes=dtypes, mat=tuple(mat_buckets),
+                     vec=tuple(vec_buckets), fallback=tuple(fallback),
+                     tags=tuple(tags), beta1=float(beta1))
+
+
+# ---------------------------------------------------------------------------
+# state pytrees
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class ArenaSM3State:
+    """All SM3 optimizer state, arena-resident. Children are arrays only;
+    the static plan rides in the pytree aux data."""
+
+    def __init__(self, plan: ArenaPlan, count, acc, mom, vacc, vmom,
+                 fb_mu, fb_mom):
+        self.plan = plan
+        self.count = count      # int32 scalar — lr-schedule step
+        self.acc = acc          # per mat bucket: (acc_elems,) f32
+        self.mom = mom          # per mat bucket: (T, bm, bn) wdtype, or ()
+        self.vacc = vacc        # per vec bucket: (rows, LANES) f32
+        self.vmom = vmom        # per vec bucket: (rows, LANES) wdtype, or ()
+        self.fb_mu = fb_mu      # per fallback leaf: MuTuple
+        self.fb_mom = fb_mom    # per fallback leaf: momentum array, or ()
+
+    def tree_flatten(self):
+        return ((self.count, self.acc, self.mom, self.vacc, self.vmom,
+                 self.fb_mu, self.fb_mom), self.plan)
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        return cls(plan, *children)
+
+    def __repr__(self):
+        return (f'ArenaSM3State(mat={len(self.plan.mat)}, '
+                f'vec={len(self.plan.vec)}, '
+                f'fallback={len(self.plan.fallback)})')
+
+
+@jax.tree_util.register_pytree_node_class
+class ArenaParams:
+    """Arena-resident parameters (opt-in): merged-2-D leaves live in the
+    tile arenas, vec leaves in the flat vec arenas, fallback leaves stay
+    per-leaf. The model unpacks per-leaf views for the forward pass; the
+    AD transpose of that unpack packs the gradients — so with resident
+    params the optimizer step performs *zero* per-step layout copies."""
+
+    def __init__(self, plan: ArenaPlan, mat, vec, other):
+        self.plan = plan
+        self.mat = mat          # per mat bucket: (T, bm, bn) wdtype
+        self.vec = vec          # per vec bucket: (rows, LANES) wdtype
+        self.other = other      # per fallback leaf: array
+
+    def tree_flatten(self):
+        return ((self.mat, self.vec, self.other), self.plan)
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        return cls(plan, *children)
+
+    def __repr__(self):
+        return f'ArenaParams(mat={len(self.plan.mat)}, vec={len(self.plan.vec)})'
+
+
+def init_state(plan: ArenaPlan) -> ArenaSM3State:
+    b1 = plan.beta1
+    acc = tuple(jnp.zeros((b.acc_elems,), jnp.float32) for b in plan.mat)
+    mom = tuple(jnp.zeros((b.tiles_pad, b.bm, b.bn), jnp.dtype(b.wdtype))
+                for b in plan.mat) if b1 else ()
+    vacc = tuple(jnp.zeros((b.rows, LANES), jnp.float32) for b in plan.vec)
+    vmom = tuple(jnp.zeros((b.rows, LANES), jnp.dtype(b.wdtype))
+                 for b in plan.vec) if b1 else ()
+    fb_mu = tuple(
+        tuple(jnp.zeros(s, jnp.float32)
+              for s in plan.covers[i].acc_shapes(plan.shapes[i]))
+        for i in plan.fallback)
+    fb_mom = tuple(jnp.zeros(plan.shapes[i], jnp.dtype(plan.dtypes[i]))
+                   for i in plan.fallback) if b1 else ()
+    return ArenaSM3State(plan, jnp.zeros([], jnp.int32), acc, mom,
+                         vacc, vmom, fb_mu, fb_mom)
+
+
+# ---------------------------------------------------------------------------
+# tiling / packing helpers
+# ---------------------------------------------------------------------------
+
+def tile2d(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """(M, N) -> (gm·gn, bm, bn), row-major tiles, zero padded (inert:
+    SM3 statistics are >= 0 and padded gradients are 0)."""
+    M, N = x.shape
+    gm, gn = _ceil_div(M, bm), _ceil_div(N, bn)
+    mpad, npad = gm * bm - M, gn * bn - N
+    if mpad or npad:
+        x = jnp.pad(x, ((0, mpad), (0, npad)))
+    return x.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3).reshape(
+        gm * gn, bm, bn)
+
+
+def untile2d(t: jnp.ndarray, M: int, N: int) -> jnp.ndarray:
+    """(gm·gn, bm, bn) -> (M, N): inverse of :func:`tile2d`."""
+    _, bm, bn = t.shape
+    gm, gn = _ceil_div(M, bm), _ceil_div(N, bn)
+    x = t.reshape(gm, gn, bm, bn).transpose(0, 2, 1, 3).reshape(
+        gm * bm, gn * bn)
+    return x[:M, :N]
+
+
+def pack_mat(bucket: MatBucket, flat_leaves: Sequence[jnp.ndarray]
+             ) -> jnp.ndarray:
+    """Pack per-leaf arrays into the bucket's (tiles_pad, bm, bn) tile
+    arena (trailing quantum-pad tiles are zero — inert)."""
+    parts = [tile2d(flat_leaves[l.idx].reshape(l.rows, l.cols),
+                    bucket.bm, bucket.bn) for l in bucket.leaves]
+    out = jnp.concatenate(parts, axis=0)
+    if bucket.has_pad:
+        out = jnp.pad(out, ((0, bucket.tiles_pad - bucket.tiles),
+                            (0, 0), (0, 0)))
+    return out
+
+
+def unpack_mat_leaf(bucket: MatBucket, l: MatLeaf, tiles: jnp.ndarray
+                    ) -> jnp.ndarray:
+    return untile2d(tiles[l.tile0:l.tile0 + l.tiles], l.rows,
+                    l.cols).reshape(l.shape)
+
+
+def pack_vec(bucket: VecBucket, flat_leaves: Sequence[jnp.ndarray],
+             dtype=None) -> jnp.ndarray:
+    flat = jnp.concatenate([flat_leaves[l.idx].reshape(-1)
+                            for l in bucket.leaves])
+    if dtype is not None:
+        flat = flat.astype(dtype)
+    pad = bucket.rows * LANES - bucket.elems
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(bucket.rows, LANES)
+
+
+def unpack_vec_leaf(l: VecLeaf, arena: jnp.ndarray) -> jnp.ndarray:
+    return arena.reshape(-1)[l.off:l.off + l.size].reshape(l.shape)
+
+
+@functools.lru_cache(maxsize=None)
+def bucket_tables(bucket: MatBucket):
+    """(first, rowtile, coltile) int32 tables, one entry per tile. These are
+    the scalar-prefetch operands of the ragged kernel: ``rowtile[t]`` /
+    ``coltile[t]`` select the accumulator block, ``first[t]`` marks the
+    first column-tile of each (leaf, row-block) segment so the kernel
+    initializes instead of max-accumulating the row statistic."""
+    first, rowt, colt = [], [], []
+    for l in bucket.leaves:
+        for i in range(l.gm):
+            for j in range(l.gn):
+                first.append(1 if j == 0 else 0)
+                rowt.append(l.rowtile0 + i)
+                colt.append(l.coltile0 + j)
+    for k in range(bucket.tiles_pad - bucket.tiles):
+        # quantum-pad tiles: zeros routed to the scratch accumulator slot
+        # appended by row_col_operands (consecutive revisit holds — they
+        # sit at the end of the grid)
+        first.append(1 if k == 0 else 0)
+        rowt.append(bucket.rowtiles)
+        colt.append(bucket.coltiles)
+    return (np.asarray(first, np.int32), np.asarray(rowt, np.int32),
+            np.asarray(colt, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# accumulator views (logical <-> kernel operands)
+# ---------------------------------------------------------------------------
+
+def mu_views(plan: ArenaPlan, l: MatLeaf, acc_arena: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, ...]:
+    """The leaf's logical cover accumulators, as (static) slices of the
+    bucket acc arena."""
+    cover = plan.covers[l.idx]
+    out, off = [], l.acc_off
+    for size, shp in zip(l.acc_sizes, cover.acc_shapes(l.shape)):
+        out.append(acc_arena[off:off + size].reshape(shp))
+        off += size
+    return tuple(out)
+
+
+def row_col_operands(plan: ArenaPlan, bucket: MatBucket,
+                     acc_arena: jnp.ndarray):
+    """Derive the ragged kernel's (Tr, bm, 1) row and (Tc, 1, bn) col
+    operands from the logical accumulators — Θ(Σ(M+N)) work per step, the
+    exact ``row_in``/``col_in`` of each leaf's cover plan."""
+    rows, cols = [], []
+    for l in bucket.leaves:
+        p2 = plan.covers[l.idx].merged_2d_plan(l.shape)
+        mu = mu_views(plan, l, acc_arena)
+        r = p2.row_in(mu)                                   # (M, 1)
+        r = jnp.pad(r, ((0, l.gm * bucket.bm - l.rows), (0, 0)))
+        rows.append(r.reshape(l.gm, bucket.bm, 1))
+        c = p2.col_in(mu).reshape(-1)                       # (N,)
+        c = jnp.pad(c, (0, l.gn * bucket.bn - l.cols))
+        cols.append(c.reshape(l.gn, 1, bucket.bn))
+    if bucket.has_pad:
+        # scratch slot for the quantum-pad tiles' row/col statistics
+        rows.append(jnp.zeros((1, bucket.bm, 1), jnp.float32))
+        cols.append(jnp.zeros((1, 1, bucket.bn), jnp.float32))
+    return jnp.concatenate(rows, axis=0), jnp.concatenate(cols, axis=0)
+
+
+def fold_acc(plan: ArenaPlan, bucket: MatBucket, acc_arena: jnp.ndarray,
+             nrow: jnp.ndarray, ncol: jnp.ndarray) -> jnp.ndarray:
+    """Fold the kernel's per-merged-row/-col ν maxima back into the logical
+    accumulators (each cover plan's exact ``fold_out``) and re-emit the
+    flat acc arena. O(state)-sized concat of small arrays — no model-sized
+    copies."""
+    parts = []
+    for l in bucket.leaves:
+        p2 = plan.covers[l.idx].merged_2d_plan(l.shape)
+        mu = mu_views(plan, l, acc_arena)
+        row_new = nrow[l.rowtile0:l.rowtile0 + l.gm].reshape(
+            l.gm * bucket.bm, 1)[:l.rows]
+        col_new = ncol[l.coltile0:l.coltile0 + l.gn].reshape(
+            1, l.gn * bucket.bn)[:, :l.cols]
+        new_mu = p2.fold_out(row_new, col_new, mu)
+        parts.extend(a.astype(jnp.float32).reshape(-1) for a in new_mu)
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# arena <-> logical (per-leaf chain state / param tree)
+# ---------------------------------------------------------------------------
+
+def _chain_states(plan: ArenaPlan, count, mu_list, mom_list):
+    from repro.core.sm3 import SM3State  # lazy: core.sm3 imports this module
+    out = []
+    for tag in plan.tags:
+        if tag == 'sm3':
+            out.append(SM3State(mu=plan.treedef.unflatten(mu_list)))
+        elif tag == 'trace':
+            out.append(base.TraceState(
+                momentum=plan.treedef.unflatten(mom_list)))
+        elif tag == 'lr':
+            out.append(base.ScaleByLrState(count=count))
+        elif tag == 'clip':
+            out.append(base.ClipByGlobalNormState())
+        else:  # 'wd'
+            out.append(base.EmptyState())
+    return tuple(out)
+
+
+def to_logical(state: ArenaSM3State) -> tuple:
+    """The unfused chain's state pytree (bit-for-bit the values the
+    per-leaf layout would hold) — checkpoints save this view."""
+    plan = state.plan
+    n = plan.n_leaves
+    mu: List[Any] = [None] * n
+    mom: List[Any] = [None] * n
+    for bi, b in enumerate(plan.mat):
+        marena = state.mom[bi] if state.mom else None
+        for l in b.leaves:
+            mu[l.idx] = mu_views(plan, l, state.acc[bi])
+            if marena is not None:
+                mom[l.idx] = unpack_mat_leaf(b, l, marena)
+    for bi, b in enumerate(plan.vec):
+        vmarena = state.vmom[bi] if state.vmom else None
+        for l in b.leaves:
+            acc_shape = plan.covers[l.idx].acc_shapes(l.shape)[0]
+            mu[l.idx] = (unpack_vec_leaf(l, state.vacc[bi])
+                         .reshape(acc_shape),)
+            if vmarena is not None:
+                mom[l.idx] = unpack_vec_leaf(l, vmarena)
+    for k, idx in enumerate(plan.fallback):
+        mu[idx] = state.fb_mu[k]
+        if state.fb_mom:
+            mom[idx] = state.fb_mom[k]
+    return _chain_states(plan, state.count, mu, mom)
+
+
+def from_logical(plan: ArenaPlan, chain_state: tuple) -> ArenaSM3State:
+    """Pack the unfused chain's state pytree into the arenas (inverse of
+    :func:`to_logical`; zero padding everywhere — inert)."""
+    st = dict(zip(plan.tags, chain_state))
+    count = st['lr'].count
+    mu_list = list(plan.treedef.flatten_up_to(st['sm3'].mu))
+    mom_list = list(plan.treedef.flatten_up_to(st['trace'].momentum)) \
+        if 'trace' in st else [None] * plan.n_leaves
+
+    acc, mom = [], []
+    for b in plan.mat:
+        flat = []
+        for l in b.leaves:
+            flat.extend(a.astype(jnp.float32).reshape(-1)
+                        for a in mu_list[l.idx])
+        acc.append(jnp.concatenate(flat) if flat
+                   else jnp.zeros((0,), jnp.float32))
+        if 'trace' in st:
+            mom.append(pack_mat(b, mom_list))
+    vacc, vmom = [], []
+    for b in plan.vec:
+        flat_mu = [None] * plan.n_leaves
+        for l in b.leaves:
+            flat_mu[l.idx] = mu_list[l.idx][0]
+        vacc.append(pack_vec(b, flat_mu, dtype=jnp.float32))
+        if 'trace' in st:
+            vmom.append(pack_vec(b, mom_list))
+    fb_mu = tuple(tuple(mu_list[i]) for i in plan.fallback)
+    fb_mom = tuple(mom_list[i] for i in plan.fallback) \
+        if 'trace' in st else ()
+    return ArenaSM3State(plan, count, tuple(acc), tuple(mom),
+                         tuple(vacc), tuple(vmom), fb_mu, fb_mom)
+
+
+def pack_params(plan: ArenaPlan, params: PyTree) -> ArenaParams:
+    flat = plan.treedef.flatten_up_to(params)
+    mat = tuple(pack_mat(b, flat) for b in plan.mat)
+    vec = tuple(pack_vec(b, flat) for b in plan.vec)
+    other = tuple(flat[i] for i in plan.fallback)
+    return ArenaParams(plan, mat, vec, other)
+
+
+def unpack_params(ap: ArenaParams) -> PyTree:
+    plan = ap.plan
+    flat: List[Any] = [None] * plan.n_leaves
+    for bi, b in enumerate(plan.mat):
+        for l in b.leaves:
+            flat[l.idx] = unpack_mat_leaf(b, l, ap.mat[bi]).astype(
+                jnp.dtype(plan.dtypes[l.idx]))
+    for bi, b in enumerate(plan.vec):
+        for l in b.leaves:
+            flat[l.idx] = unpack_vec_leaf(l, ap.vec[bi])
+    for k, idx in enumerate(plan.fallback):
+        flat[idx] = ap.other[k]
+    return plan.treedef.unflatten(flat)
+
+
+# --- generic checkpoint adapters -------------------------------------------
+
+def is_arena_node(x) -> bool:
+    return isinstance(x, (ArenaSM3State, ArenaParams))
+
+
+def logical_tree(tree: PyTree) -> PyTree:
+    """Replace every arena node in ``tree`` by its logical per-leaf pytree
+    (identity when the tree has none) — what checkpoints store."""
+    def conv(x):
+        if isinstance(x, ArenaSM3State):
+            return to_logical(x)
+        if isinstance(x, ArenaParams):
+            return unpack_params(x)
+        return x
+    return jax.tree_util.tree_map(conv, tree, is_leaf=is_arena_node)
+
+
+def logical_template(tree: PyTree) -> PyTree:
+    """Like :func:`logical_tree`, but arena nodes become ShapeDtypeStruct
+    templates of their logical view (no array work; works when the arena
+    node itself holds ShapeDtypeStructs). Non-arena leaves pass through
+    untouched — they may carry shardings the caller wants to keep."""
+    def conv(x):
+        if is_arena_node(x):
+            return jax.eval_shape(logical_tree, x)
+        return x
+    return jax.tree_util.tree_map(conv, tree, is_leaf=is_arena_node)
+
+
+def pack_like(template: PyTree, logical: PyTree) -> PyTree:
+    """Re-pack a logical (per-leaf) tree into the arena layout described by
+    ``template``'s arena nodes (identity where the template has none)."""
+    flat_t, tdef = jax.tree_util.tree_flatten(template,
+                                              is_leaf=is_arena_node)
+    parts = tdef.flatten_up_to(logical)
+    out = []
+    for t, s in zip(flat_t, parts):
+        if isinstance(t, ArenaSM3State):
+            out.append(from_logical(t.plan, s))
+        elif isinstance(t, ArenaParams):
+            out.append(pack_params(t.plan, s))
+        else:
+            out.append(s)
+    return tdef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (analytic — matches the materialized state exactly)
+# ---------------------------------------------------------------------------
+
+def _arr_bytes(shape: Sequence[int], dtype) -> int:
+    return _nelems(shape) * jnp.dtype(dtype).itemsize
+
+
+def state_bytes(plan: ArenaPlan) -> int:
+    """Exact bytes :func:`init_state` materializes — including tile/lane
+    padding slack (the price of the persistent packed layout)."""
+    total = _arr_bytes((), jnp.int32)  # count
+    for b in plan.mat:
+        total += _arr_bytes((b.acc_elems,), jnp.float32)
+        if plan.beta1:
+            total += _arr_bytes((b.tiles_pad, b.bm, b.bn), b.wdtype)
+    for b in plan.vec:
+        total += _arr_bytes((b.rows, LANES), jnp.float32)
+        if plan.beta1:
+            total += _arr_bytes((b.rows, LANES), b.wdtype)
+    for i in plan.fallback:
+        cover, shape = plan.covers[i], plan.shapes[i]
+        total += sum(_arr_bytes(s, jnp.float32)
+                     for s in cover.acc_shapes(shape))
+        if plan.beta1:
+            total += _arr_bytes(shape, plan.dtypes[i])
+    return total
+
+
+def pad_bytes(plan: ArenaPlan) -> int:
+    """The padding/alignment slack inside :func:`state_bytes` — arena bytes
+    beyond what the per-leaf layout would store."""
+    slack = 0
+    for b in plan.mat:
+        if plan.beta1:
+            itemsize = jnp.dtype(b.wdtype).itemsize
+            logical = sum(_nelems(l.shape) for l in b.leaves)
+            slack += (b.tiles_pad * b.bm * b.bn - logical) * itemsize
+    for b in plan.vec:
+        pad = b.rows * LANES - b.elems
+        slack += pad * 4
+        if plan.beta1:
+            slack += pad * jnp.dtype(b.wdtype).itemsize
+    return slack
+
+
+def params_bytes(plan: ArenaPlan) -> int:
+    """Bytes of an :class:`ArenaParams` (arena-resident parameters)."""
+    total = 0
+    for b in plan.mat:
+        total += _arr_bytes((b.tiles_pad, b.bm, b.bn), b.wdtype)
+    for b in plan.vec:
+        total += _arr_bytes((b.rows, LANES), b.wdtype)
+    for i in plan.fallback:
+        total += _arr_bytes(plan.shapes[i], plan.dtypes[i])
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+def state_specs(state: ArenaSM3State, data_axis: str = 'data'
+                ) -> ArenaSM3State:
+    """PartitionSpec tree congruent with the state: the flat/tile leading
+    axis of every arena is sharded on ``data_axis`` (FSDP-style — the
+    arena mixes leaves with different logical layouts, so the only
+    uniformly correct placement is along the packed axis); offset tables
+    are static (not state) and the tiny acc arenas / fallback leaves are
+    replicated."""
+    from jax.sharding import PartitionSpec as P
+    plan = state.plan
+    acc = tuple(P(None) for _ in plan.mat)
+    mom = tuple(P(data_axis, None, None) for _ in plan.mat) \
+        if state.mom else ()
+    vacc = tuple(P(data_axis, None) for _ in plan.vec)
+    vmom = tuple(P(data_axis, None) for _ in plan.vec) if state.vmom else ()
+    fb_mu = tuple(tuple(P(*(None,) * a.ndim) for a in mus)
+                  for mus in state.fb_mu)
+    fb_mom = tuple(P(*(None,) * m.ndim) for m in state.fb_mom) \
+        if state.fb_mom else ()
+    return ArenaSM3State(plan, P(), acc, mom, vacc, vmom, fb_mu, fb_mom)
+
+
+def params_specs(ap: ArenaParams, data_axis: str = 'data') -> ArenaParams:
+    from jax.sharding import PartitionSpec as P
+    plan = ap.plan
+    mat = tuple(P(data_axis, None, None) for _ in plan.mat)
+    vec = tuple(P(data_axis, None) for _ in plan.vec)
+    other = tuple(P(*(None,) * len(plan.shapes[i]))
+                  for i in plan.fallback)
+    return ArenaParams(plan, mat, vec, other)

@@ -47,6 +47,26 @@ class FusedGradientTransformation(NamedTuple):
     fused_update: Callable[[PyTree, PyTree, PyTree], tuple]
 
 
+class ArenaGradientTransformation(NamedTuple):
+    """A FusedGradientTransformation whose state (and, opt-in, params)
+    lives in a persistent packed arena (core.arena).
+
+    ``fused_update`` accepts either a per-leaf parameter pytree or an
+    ``arena.ArenaParams`` (and, in the latter case, gradients in either
+    layout — taking grads w.r.t. packed params hands them over pre-packed).
+    ``pack_params`` / ``unpack_params`` convert between the two; the
+    trainer's arena-params flag uses them to keep parameters resident.
+    ``init``/``update`` keep the reference two-phase protocol (``update``
+    converts through the logical per-leaf state, so it is the slow but
+    exact path).
+    """
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+    fused_update: Callable[[PyTree, PyTree, PyTree], tuple]
+    pack_params: Callable[[PyTree], PyTree]
+    unpack_params: Callable[[PyTree], PyTree]
+
+
 def apply_gradients(tx: GradientTransformation, grads: PyTree, state: PyTree,
                     params: PyTree) -> tuple:
     """One optimizer application: ``(new_params, new_state)``.

@@ -9,6 +9,12 @@ Core" minus the model/activation bytes.
 SM3 accounting is cover-aware: pass a ``covers.CoverPolicy`` to account for
 non-default per-leaf covers (blocked, grouped, full); the default is the
 paper's co-dim-1 cover, matching the pre-API numbers exactly.
+
+The arena execution layout (``layout='arena'``) stores state packed into
+per-dtype tile/lane arenas with explicit padding slack; pass
+``layout='arena'`` to account those bytes exactly — including the pad —
+so analytic == materialized still holds (``sm3_arena_pad_bytes`` reports
+the slack alone).
 """
 from __future__ import annotations
 
@@ -64,19 +70,76 @@ def sm3_accumulator_elems(params_or_shapes: PyTree,
                for path, shape in param_shapes_with_paths(params_or_shapes))
 
 
+def _as_sds_tree(params_or_shapes: PyTree) -> PyTree:
+    """Coerce shape-tuple leaves to f32 ShapeDtypeStructs (arena planning
+    needs dtypes; bare shapes default to f32, matching the f32 model)."""
+    def conv(leaf):
+        if hasattr(leaf, 'shape') and hasattr(leaf, 'dtype'):
+            return leaf
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in _leaf_shape(leaf)),
+                                    jnp.float32)
+    return jax.tree.map(conv, params_or_shapes, is_leaf=_is_shape_leaf)
+
+
+def _arena_plan(params_or_shapes: PyTree, beta1: float,
+                cover_policy: Optional[covers_lib.CoverPolicy]):
+    from repro.core import arena as arena_lib
+    policy = cover_policy or covers_lib.DEFAULT_POLICY
+    tags = ('sm3', 'trace', 'lr') if beta1 else ('sm3', 'lr')
+    return arena_lib.plan_arena(_as_sds_tree(params_or_shapes), policy,
+                                tags, beta1)
+
+
+def sm3_arena_state_bytes(params_or_shapes: PyTree, beta1: float = 0.9,
+                          cover_policy: Optional[covers_lib.CoverPolicy]
+                          = None) -> int:
+    """Exact bytes of the arena-layout SM3 state — momentum tile arenas,
+    flat accumulator arenas, vec arenas, fallback leaves, and the step
+    counter — *including* tile/lane padding slack, so it equals the
+    materialized ``ArenaSM3State`` byte-for-byte."""
+    from repro.core import arena as arena_lib
+    return arena_lib.state_bytes(
+        _arena_plan(params_or_shapes, beta1, cover_policy))
+
+
+def sm3_arena_pad_bytes(params_or_shapes: PyTree, beta1: float = 0.9,
+                        cover_policy: Optional[covers_lib.CoverPolicy]
+                        = None) -> int:
+    """The padding/alignment slack alone: arena bytes beyond what the
+    per-leaf layout stores (the price of the persistent packed layout)."""
+    from repro.core import arena as arena_lib
+    return arena_lib.pad_bytes(
+        _arena_plan(params_or_shapes, beta1, cover_policy))
+
+
 def optimizer_state_bytes(optimizer: str, params_or_shapes: PyTree,
                           beta1: float = 0.9,
                           cover_policy: Optional[covers_lib.CoverPolicy]
-                          = None) -> int:
+                          = None, layout: Optional[str] = None) -> int:
     """Exact bytes of auxiliary optimizer state (f32), by optimizer name.
 
       adam      : 2d                  (m, v)
       adagrad   : d (+d momentum)     (γ)
       adafactor : Σ rows+cols (+d momentum)  [factored v, rank≥2]
       sm3       : Σ cover accumulators (+d momentum); co-dim-1 by default,
-                  any per-leaf policy via ``cover_policy``
+                  any per-leaf policy via ``cover_policy``; with
+                  ``layout='arena'`` the packed-arena bytes incl. padding
       sgd       : d momentum
     """
+    if layout not in (None, 'arena', 'stacked', 'per_leaf'):
+        raise ValueError(f'unknown layout {layout!r} (expected None, '
+                         "'arena', 'stacked', or 'per_leaf')")
+    if layout == 'arena':
+        # sm3-i cannot construct the arena layout (fused is SM3-II only)
+        if optimizer not in ('sm3', 'sm3-ii'):
+            raise ValueError(f"layout='arena' only applies to sm3/sm3-ii, "
+                             f'got {optimizer!r}')
+        return sm3_arena_state_bytes(params_or_shapes, beta1=beta1,
+                                     cover_policy=cover_policy)
+    if layout is not None and optimizer not in ('sm3', 'sm3-i', 'sm3-ii'):
+        raise ValueError(f'layout={layout!r} only applies to SM3 '
+                         f'optimizers, got {optimizer!r}')
+    # 'stacked'/'per_leaf' keep the per-leaf state layout — fall through
     shapes = param_shapes(params_or_shapes)
     d = sum(_nelems(s) for s in shapes)
     mom = d if beta1 else 0

@@ -28,7 +28,7 @@ _COMMON_EXTRA = frozenset({'schedule', 'warmup_steps'})
 _COVER_EXTRA = frozenset({'cover_rules', 'default_cover'})
 KNOWN_EXTRA_KEYS = {
     'sm3': _COMMON_EXTRA | _COVER_EXTRA
-    | {'clip_norm', 'use_pallas', 'fused', 'stacked'},
+    | {'clip_norm', 'use_pallas', 'fused', 'stacked', 'layout'},
     'sm3-i': _COMMON_EXTRA | _COVER_EXTRA | {'clip_norm'},
     'adam': _COMMON_EXTRA,
     'adagrad': _COMMON_EXTRA,
@@ -85,6 +85,7 @@ def make_optimizer(spec: Union[OptimizerSpec, dict],
             use_pallas=spec.extra.get('use_pallas', False),
             fused=spec.extra.get('fused', False),
             stacked=spec.extra.get('stacked', True),
+            layout=spec.extra.get('layout'),
             cover_policy=_cover_policy(spec.extra))
         return sm3.sm3(lr, config=cfg)
     if name == 'adam':

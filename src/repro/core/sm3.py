@@ -68,10 +68,26 @@ class SM3Config:
     use_pallas: bool = False
     fused: bool = False
     stacked: bool = True
+    layout: Optional[str] = None
     cover_policy: Optional[CoverPolicy] = None
+
+    _LAYOUTS = ('arena', 'stacked', 'per_leaf')
 
     def policy(self) -> CoverPolicy:
         return self.cover_policy or covers_lib.DEFAULT_POLICY
+
+    def resolved_layout(self) -> str:
+        """The fused execution layout: 'arena' (persistent packed state,
+        ragged kernel — one launch per dtype), 'stacked' (per-step shape
+        buckets, one launch per distinct merged shape — the default), or
+        'per_leaf' (one launch per rank>=2 leaf). ``layout`` wins over the
+        legacy ``stacked`` bool when set."""
+        if self.layout is not None:
+            if self.layout not in self._LAYOUTS:
+                raise ValueError(f'unknown SM3 layout {self.layout!r} '
+                                 f'(expected one of {self._LAYOUTS})')
+            return self.layout
+        return 'stacked' if self.stacked else 'per_leaf'
 
 
 class SM3State(NamedTuple):
@@ -183,6 +199,7 @@ def sm3(learning_rate: base.ScalarOrSchedule,
         use_pallas: bool = False,
         fused: bool = False,
         stacked: bool = True,
+        layout: Optional[str] = None,
         cover_policy: Optional[CoverPolicy] = None,
         *, config: Optional[SM3Config] = None) -> base.GradientTransformation:
     """The full SM3 optimizer as used in the paper's experiments.
@@ -210,14 +227,28 @@ def sm3(learning_rate: base.ScalarOrSchedule,
     keeps the per-leaf fused dispatch (one launch per rank≥2 leaf — the
     pre-bucketing behavior, retained for comparison benchmarks and parity
     tests).
+
+    ``layout`` names the fused dispatch explicitly (and implies
+    ``fused=True``): 'stacked' / 'per_leaf' are the two modes above;
+    'arena' keeps the optimizer state *persistently packed* in per-dtype
+    arenas (core.arena) updated in place by a single ragged kernel launch
+    per dtype — no per-step state stack/unstack at all, and ≤ 2 launches
+    per dtype regardless of shape diversity. Arena state is a different
+    (packed) pytree, but checkpoints convert through the logical per-leaf
+    view, so they stay round-trip compatible with the other layouts.
     """
     cfg = _config_from_kwargs(config, dict(
         beta1=beta1, variant=variant, weight_decay=weight_decay,
         clip_norm=clip_norm, accumulator_dtype=accumulator_dtype,
-        use_pallas=use_pallas, fused=fused, stacked=stacked,
+        use_pallas=use_pallas, fused=fused, stacked=stacked, layout=layout,
         cover_policy=cover_policy))
     if cfg.variant not in ('I', 'II'):
         raise ValueError(f'unknown SM3 variant {cfg.variant!r}')
+    if cfg.layout is not None and not cfg.fused:
+        # sm3(layout=...) is shorthand for the fused execution mode — the
+        # layout names how the fused kernels are dispatched
+        cfg = dataclasses.replace(cfg, fused=True)
+    cfg.resolved_layout()  # validates the layout spelling
     if cfg.fused:
         if cfg.variant != 'II':
             raise ValueError('fused=True implements SM3-II only '
@@ -275,24 +306,23 @@ def sm3(learning_rate: base.ScalarOrSchedule,
 _BUCKET_LANES = 256
 
 
-def _fused_sm3(learning_rate: base.ScalarOrSchedule,
-               cfg: SM3Config) -> base.FusedGradientTransformation:
-    reference = sm3(learning_rate,
-                    config=dataclasses.replace(cfg, fused=False))
-    beta1, weight_decay, clip_norm = cfg.beta1, cfg.weight_decay, cfg.clip_norm
-    stacked, policy = cfg.stacked, cfg.policy()
+def _chain_tags(cfg: SM3Config) -> Tuple[str, ...]:
     tags = []
-    if clip_norm is not None:
+    if cfg.clip_norm is not None:
         tags.append('clip')
     tags.append('sm3')
-    if beta1:
+    if cfg.beta1:
         tags.append('trace')
-    if weight_decay:
+    if cfg.weight_decay:
         tags.append('wd')
     tags.append('lr')
+    return tuple(tags)
 
+
+def _make_leaf_reference(beta1, weight_decay, clip_norm):
+    """Exact chain semantics for leaves the kernels don't cover — shared
+    by the stacked/per-leaf and arena dispatchers."""
     def _leaf_reference(p, m, g, mu, cover, step_lr, gscale):
-        """Exact chain semantics for leaves the kernels don't cover."""
         if clip_norm is not None:
             g = (gscale * g.astype(jnp.float32)).astype(g.dtype)
         u, new_mu = _update_leaf_ii(g, mu, cover)
@@ -307,6 +337,29 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule,
         delta = (-step_lr * upd).astype(upd.dtype)
         new_p = (p + delta.astype(p.dtype)).astype(p.dtype)
         return new_p, new_m, new_mu
+    return _leaf_reference
+
+
+def _nbytes(shape, dtype) -> int:
+    n = jnp.dtype(dtype).itemsize
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _fused_sm3(learning_rate: base.ScalarOrSchedule,
+               cfg: SM3Config) -> base.FusedGradientTransformation:
+    if cfg.resolved_layout() == 'arena':
+        return _arena_sm3(learning_rate, cfg)
+    reference = sm3(learning_rate,
+                    config=dataclasses.replace(cfg, fused=False,
+                                               layout=None))
+    beta1, weight_decay, clip_norm = cfg.beta1, cfg.weight_decay, cfg.clip_norm
+    stacked = cfg.resolved_layout() == 'stacked'
+    policy = cfg.policy()
+    tags = _chain_tags(cfg)
+
+    _leaf_reference = _make_leaf_reference(beta1, weight_decay, clip_norm)
 
     def fused_update(grads, state, params):
         from repro.kernels.sm3 import ops as sm3_ops  # lazy, like use_pallas
@@ -353,6 +406,21 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule,
             if stacked:
                 # one (K, R, C) launch for the whole shape bucket
                 idxs = [i for i, _ in items]
+                K = len(idxs)
+                # layout-copy accounting (trace-time, like launch counts):
+                # the stack/unstack traffic the arena layout eliminates
+                sm3_ops.record_copy_bytes(
+                    'grads', K * _nbytes((R, C), flat_g[idxs[0]].dtype))
+                sm3_ops.record_copy_bytes(
+                    'params', 2 * K * _nbytes((R, C), flat_p[idxs[0]].dtype))
+                # Θ(M+N) row/col derive + fold exists in every layout
+                # (the arena records its equivalent too) — kept distinct
+                # from the model-sized 'state' traffic the arena removes
+                sm3_ops.record_copy_bytes('acc', 2 * K * (R + C) * 4)
+                if beta1:
+                    sm3_ops.record_copy_bytes(
+                        'state',
+                        2 * K * _nbytes((R, C), flat_m[idxs[0]].dtype))
                 gs = jnp.stack([flat_g[i].reshape(R, C) for i in idxs])
                 ws = jnp.stack([flat_p[i].reshape(R, C) for i in idxs])
                 rows = jnp.stack([plan.row_in(flat_mu[i])
@@ -394,6 +462,15 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule,
 
         for _, items in sorted(vec_buckets.items(), key=lambda kv: str(kv[0])):
             idxs = [i for i, _ in items]
+            L = sum(flat_g[i].size for i in idxs)
+            sm3_ops.record_copy_bytes(
+                'grads', L * jnp.dtype(flat_g[idxs[0]].dtype).itemsize)
+            sm3_ops.record_copy_bytes(
+                'params', 2 * L * jnp.dtype(flat_p[idxs[0]].dtype).itemsize)
+            vec_state = 2 * L * 4  # accumulator expand + fold
+            if beta1:
+                vec_state += 2 * L * jnp.dtype(flat_m[idxs[0]].dtype).itemsize
+            sm3_ops.record_copy_bytes('state', vec_state)
             gv = jnp.concatenate([flat_g[i].reshape(-1) for i in idxs])
             wv = jnp.concatenate([flat_p[i].reshape(-1) for i in idxs])
             av = jnp.concatenate([plan.expand(flat_mu[i])
@@ -446,6 +523,209 @@ def _fused_sm3(learning_rate: base.ScalarOrSchedule,
     return base.FusedGradientTransformation(
         init=reference.init, update=reference.update,
         fused_update=fused_update)
+
+
+# ---------------------------------------------------------------------------
+# Arena execution layout (layout='arena'): persistent packed state, ragged
+# kernel — see core.arena for the layout and kernels.sm3 for the kernel.
+#
+# Per step and per parameter dtype the dispatch is:
+#   * ONE ragged launch over the (T, bm, bn) tile arena covering every
+#     merged-2-D leaf (any mix of shapes and covers), plus
+#   * ONE elementwise launch over the (rows, LANES) vec arena,
+# i.e. <= 2 launches per dtype, independent of the model's shape diversity.
+# Momentum and the vec accumulator live in the arenas across steps and are
+# updated in place (kernel aliasing + donation); the logical cover
+# accumulators live flat in the per-bucket acc arena, from which the
+# Θ(state)-sized kernel row/col operands are derived and folded back each
+# step — exact per-cover semantics, O(state) work. The only model-sized
+# per-step copies left are the gradient pack (one fused gather) and, when
+# params are not arena-resident, the w pack/unpack around the kernel; both
+# disappear when the trainer opts params into the arena (the AD transpose
+# of the forward-pass unpack delivers gradients pre-packed).
+# ---------------------------------------------------------------------------
+
+def _arena_sm3(learning_rate: base.ScalarOrSchedule,
+               cfg: SM3Config) -> base.ArenaGradientTransformation:
+    from repro.core import arena as arena_lib
+    reference = sm3(learning_rate,
+                    config=dataclasses.replace(cfg, fused=False,
+                                               layout=None))
+    beta1, weight_decay, clip_norm = cfg.beta1, cfg.weight_decay, cfg.clip_norm
+    policy = cfg.policy()
+    tags = _chain_tags(cfg)
+    _leaf_reference = _make_leaf_reference(beta1, weight_decay, clip_norm)
+
+    def _plan_for(params):
+        if isinstance(params, arena_lib.ArenaParams):
+            return params.plan
+        return arena_lib.plan_arena(params, policy, tags, beta1)
+
+    def init_fn(params):
+        return arena_lib.init_state(_plan_for(params))
+
+    def _bucket_g_dtype(bucket, flat_g):
+        dts = {jnp.dtype(flat_g[l.idx].dtype) for l in bucket.leaves}
+        if len(dts) > 1:
+            raise ValueError(
+                'arena layout needs a uniform gradient dtype per parameter-'
+                f'dtype bucket, got {sorted(str(d) for d in dts)} for '
+                f'{bucket.wdtype} params (cast the gradients, e.g. to f32, '
+                'or use layout="stacked")')
+        return dts.pop()
+
+    def fused_update(grads, state, params):
+        from repro.kernels.sm3 import ops as sm3_ops
+        plan = state.plan
+        resident = isinstance(params, arena_lib.ArenaParams)
+        grads_packed = isinstance(grads, arena_lib.ArenaParams)
+        if grads_packed and not resident:
+            raise ValueError('packed (ArenaParams) gradients require '
+                             'arena-resident params')
+        count = state.count
+        step_lr = base._lr_at(learning_rate, count)
+        gscale = 1.0 if clip_norm is None \
+            else base.global_norm_clip_scale(grads, clip_norm)
+
+        flat_g = None if grads_packed \
+            else plan.treedef.flatten_up_to(grads)
+        flat_p = None if resident else plan.treedef.flatten_up_to(params)
+        n = plan.n_leaves
+        new_p = [None] * n
+
+        new_acc, new_mom = [], []
+        new_mat_w = []
+        for bi, b in enumerate(plan.mat):
+            if grads_packed:
+                g = grads.mat[bi]
+            else:
+                _bucket_g_dtype(b, flat_g)
+                g = arena_lib.pack_mat(b, flat_g)
+                sm3_ops.record_copy_bytes('grads', g.size * g.dtype.itemsize)
+            if resident:
+                w = params.mat[bi]
+            else:
+                w = arena_lib.pack_mat(b, flat_p)
+                sm3_ops.record_copy_bytes('params',
+                                          2 * w.size * w.dtype.itemsize)
+            m = state.mom[bi] if state.mom else None
+            row, col = arena_lib.row_col_operands(plan, b, state.acc[bi])
+            # the per-step Θ(state) accumulator derive + fold — same
+            # quantity the stacked path records, so the rows compare
+            sm3_ops.record_copy_bytes(
+                'acc', 4 * (row.size + col.size + b.acc_elems))
+            first, rowt, colt = arena_lib.bucket_tables(b)
+            first, rowt, colt = (jnp.asarray(first), jnp.asarray(rowt),
+                                 jnp.asarray(colt))
+            out = sm3_ops.sm3_ii_fused_ragged_step(
+                w, m, g, row, col, first, rowt, colt, step_lr, beta1,
+                wd=weight_decay, gscale=gscale)
+            if m is not None:
+                wn, mn, nrow, cpart = out
+                new_mom.append(mn)
+            else:
+                wn, nrow, cpart = out
+            # quantum-pad tiles drain into a scratch segment (dropped by
+            # the slice); real segments take the cross-row-block max
+            ncol = jax.ops.segment_max(
+                cpart.reshape(b.tiles_pad, b.bn), colt,
+                num_segments=b.coltiles + (1 if b.has_pad else 0))
+            ncol = ncol[:b.coltiles].reshape(b.coltiles, 1, b.bn)
+            new_acc.append(arena_lib.fold_acc(plan, b, state.acc[bi],
+                                              nrow, ncol))
+            if resident:
+                new_mat_w.append(wn)
+            else:
+                for l in b.leaves:
+                    new_p[l.idx] = arena_lib.unpack_mat_leaf(b, l, wn)
+
+        new_vacc, new_vmom = [], []
+        new_vec_w = []
+        for bi, b in enumerate(plan.vec):
+            if grads_packed:
+                gv = grads.vec[bi]
+            else:
+                _bucket_g_dtype(b, flat_g)
+                gv = arena_lib.pack_vec(b, flat_g)
+                sm3_ops.record_copy_bytes('grads',
+                                          gv.size * gv.dtype.itemsize)
+            if resident:
+                wv = params.vec[bi]
+            else:
+                wv = arena_lib.pack_vec(b, flat_p)
+                sm3_ops.record_copy_bytes('params',
+                                          2 * wv.size * wv.dtype.itemsize)
+            mv = state.vmom[bi] if state.vmom else None
+            out = sm3_ops.sm3_ii_fused_vec_step(
+                wv, mv, gv, state.vacc[bi], step_lr, beta1,
+                wd=weight_decay, gscale=gscale)
+            if mv is not None:
+                wb, mb, ab = out
+                new_vmom.append(mb)
+            else:
+                wb, ab = out
+            new_vacc.append(ab)
+            if resident:
+                new_vec_w.append(wb)
+            else:
+                for l in b.leaves:
+                    new_p[l.idx] = arena_lib.unpack_vec_leaf(l, wb)
+
+        new_fb_mu, new_fb_mom, new_other = [], [], []
+        for k, idx in enumerate(plan.fallback):
+            p = params.other[k] if resident else flat_p[idx]
+            g = grads.other[k] if grads_packed else flat_g[idx]
+            m = state.fb_mom[k] if state.fb_mom else None
+            cover = plan.covers[idx]
+            pn, mn, mun = _leaf_reference(p, m, g, state.fb_mu[k], cover,
+                                          step_lr, gscale)
+            new_fb_mu.append(mun)
+            if m is not None:
+                new_fb_mom.append(mn)
+            if resident:
+                new_other.append(pn)
+            else:
+                new_p[idx] = pn
+
+        new_state = arena_lib.ArenaSM3State(
+            plan, count + 1, tuple(new_acc), tuple(new_mom),
+            tuple(new_vacc), tuple(new_vmom), tuple(new_fb_mu),
+            tuple(new_fb_mom))
+        if resident:
+            out_params = arena_lib.ArenaParams(plan, tuple(new_mat_w),
+                                               tuple(new_vec_w),
+                                               tuple(new_other))
+        else:
+            out_params = plan.treedef.unflatten(new_p)
+        return out_params, new_state
+
+    def update_fn(grads, state, params=None):
+        # two-phase reference protocol: route through the logical per-leaf
+        # state (exact, but repacks — the fused path is the fast one)
+        if isinstance(grads, arena_lib.ArenaParams):
+            raise ValueError(
+                'the two-phase update() protocol takes per-leaf gradients; '
+                'packed (ArenaParams) gradients only flow through '
+                'fused_update')
+        if isinstance(params, arena_lib.ArenaParams):
+            params = arena_lib.unpack_params(params)
+        logical = arena_lib.to_logical(state)
+        updates, new_logical = reference.update(grads, logical, params)
+        return updates, arena_lib.from_logical(state.plan, new_logical)
+
+    def pack_params(params):
+        if isinstance(params, arena_lib.ArenaParams):
+            return params
+        return arena_lib.pack_params(_plan_for(params), params)
+
+    def unpack_params(params):
+        if isinstance(params, arena_lib.ArenaParams):
+            return arena_lib.unpack_params(params)
+        return params
+
+    return base.ArenaGradientTransformation(
+        init=init_fn, update=update_fn, fused_update=fused_update,
+        pack_params=pack_params, unpack_params=unpack_params)
 
 
 # ---------------------------------------------------------------------------

@@ -67,6 +67,52 @@ def _count(kind: str) -> None:
     _launches[kind] += 1
 
 
+# -- layout-copy accounting -------------------------------------------------
+#
+# Bytes a fused update spends purely on *changing layout* (jnp.stack /
+# concatenate into kernel buckets and the scatter back), recorded at trace
+# time by core.sm3's dispatch paths — same discipline as the launch
+# counters (reset, abstract-trace one update, read). Kinds:
+#   'state'  — *model-sized* optimizer state (momentum; the vec bucket's
+#              per-element accumulator). The arena layout must report 0
+#              here: that state lives packed across steps.
+#   'acc'    — the Θ(Σ(M+N)) row/col accumulator derive + fold. Every
+#              layout pays this each step (it is what keeps covers exact);
+#              recorded symmetrically so stacked and arena rows compare.
+#   'params' — parameter pack/unpack around the kernel (0 when params are
+#              arena-resident).
+#   'grads'  — the once-per-step gradient pack (0 when gradients arrive
+#              pre-packed via the arena-params AD transpose).
+
+_copied_bytes: collections.Counter = collections.Counter()
+
+
+def reset_copy_bytes() -> None:
+    _copied_bytes.clear()
+
+
+def record_copy_bytes(kind: str, nbytes: int) -> None:
+    _copied_bytes[kind] += int(nbytes)
+
+
+def copy_bytes(kind: Optional[str] = None) -> int:
+    if kind is not None:
+        return _copied_bytes[kind]
+    return sum(_copied_bytes.values())
+
+
+def packed_copy_bytes() -> int:
+    """Per-step *model-sized* optimizer-state bytes copied for layout
+    alone ('state' kind) — the quantity the arena mode drives to zero.
+    The Θ(Σ(M+N)) accumulator derive/fold ('acc') is excluded: every
+    layout pays it, and it is O(state), not O(model)."""
+    return _copied_bytes['state']
+
+
+def copy_bytes_counts() -> Dict[str, int]:
+    return dict(_copied_bytes)
+
+
 # -- kernel entry points ----------------------------------------------------
 
 def sm3_ii_update(g: jnp.ndarray, row_mu: jnp.ndarray, col_mu: jnp.ndarray,
@@ -118,6 +164,27 @@ def sm3_ii_fused_stacked_step(w, m, g, row_mu, col_mu, lr, beta1, mix=None,
     return _k.sm3_ii_fused_stacked_step(w, m, g, row_mu, col_mu, lr, beta1,
                                         mix, wd, gscale, bm=bm, bn=bn,
                                         interpret=_interpret())
+
+
+def sm3_ii_fused_ragged_step(w, m, g, row_mu, col_mu, first, rowtile,
+                             coltile, lr, beta1, mix=None, wd=0.0,
+                             gscale=1.0):
+    """Fused step over a ragged (T, bm, bn) tile arena — one launch per
+    dtype bucket regardless of how many distinct leaf shapes it mixes
+    (the core.arena layout; tables are scalar-prefetch operands). Same
+    scalar conventions as ``sm3_ii_fused_step``. Returns
+    (w', m', row_mu', cpart) — or (w', row_mu', cpart) with ``m=None`` —
+    with w/m/row_mu aliased in place; the caller segment-max-reduces the
+    (T, 1, bn) col partial onto the column arena. Tile sizes are fixed by
+    the arena plan (kernels.sm3.tuning.choose_ragged_tiles), so there is
+    no per-call bm/bn override."""
+    if mix is None:
+        mix = 1.0 - beta1
+    kind = 'ragged' if m is not None else 'ragged_nomom'
+    _count(kind)
+    return _k.sm3_ii_fused_ragged_step(w, m, g, row_mu, col_mu, first,
+                                       rowtile, coltile, lr, beta1, mix, wd,
+                                       gscale, interpret=_interpret())
 
 
 def sm3_ii_fused_vec_step(w, m, g, acc, lr, beta1, mix=None, wd=0.0,

@@ -91,10 +91,14 @@ def _precondition_kernel(g_ref, row_ref, col_ref,
 
 
 def _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
-                w_out_ref, m_out_ref, nrow_ref, cpart_ref, *, j):
-    """One VMEM tile of the fused step — shared by the 2-D and stacked
-    kernels (the reductions are axis-relative so block rank doesn't matter)
-    and by the momentum-free variants (m_ref/m_out_ref None)."""
+                w_out_ref, m_out_ref, nrow_ref, cpart_ref, *, first):
+    """One VMEM tile of the fused step — shared by the 2-D, stacked, and
+    ragged kernels (the reductions are axis-relative so block rank doesn't
+    matter) and by the momentum-free variants (m_ref/m_out_ref None).
+    ``first`` marks the first column-tile of the current row segment: it
+    initializes the row-statistic output instead of max-accumulating into
+    it (grid-position ``j == 0`` for the dense kernels; a scalar-prefetch
+    table entry for the ragged kernel, whose 1-D grid has no j axis)."""
     lr = lr_beta_ref[0, 0]
     beta1 = lr_beta_ref[0, 1]
     mix = lr_beta_ref[0, 2]
@@ -127,11 +131,11 @@ def _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
     w_out_ref[...] = w_ref[...] - delta
     row_max = jnp.max(nu, axis=-1, keepdims=True)
 
-    @pl.when(j == 0)
+    @pl.when(first)
     def _init():
         nrow_ref[...] = row_max
 
-    @pl.when(j != 0)
+    @pl.when(jnp.logical_not(first))
     def _acc():
         nrow_ref[...] = jnp.maximum(nrow_ref[...], row_max)
 
@@ -147,13 +151,13 @@ def _make_fused_kernel(jdim: int, momentum: bool):
                    w_out_ref, m_out_ref, nrow_ref, cpart_ref):
             _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
                         w_out_ref, m_out_ref, nrow_ref, cpart_ref,
-                        j=pl.program_id(jdim))
+                        first=pl.program_id(jdim) == 0)
     else:
         def kernel(lr_beta_ref, w_ref, g_ref, row_ref, col_ref,
                    w_out_ref, nrow_ref, cpart_ref):
             _fused_tile(lr_beta_ref, w_ref, None, g_ref, row_ref, col_ref,
                         w_out_ref, None, nrow_ref, cpart_ref,
-                        j=pl.program_id(jdim))
+                        first=pl.program_id(jdim) == 0)
     return kernel
 
 
@@ -161,6 +165,35 @@ _fused_kernel = _make_fused_kernel(1, True)
 _fused_nomom_kernel = _make_fused_kernel(1, False)
 _stacked_kernel = _make_fused_kernel(2, True)
 _stacked_nomom_kernel = _make_fused_kernel(2, False)
+
+
+def _make_ragged_kernel(momentum: bool):
+    """Kernel entry point for the ragged (arena) launch: a 1-D grid over
+    fixed-size (bm, bn) tiles. The scalar-prefetch tables arrive as the
+    first three refs; ``first_ref[t]`` replaces the dense kernels'
+    ``j == 0`` test (the column walk is encoded in the tile order, not in
+    a grid axis)."""
+    if momentum:
+        def kernel(first_ref, rowt_ref, colt_ref, lr_beta_ref,
+                   w_ref, m_ref, g_ref, row_ref, col_ref,
+                   w_out_ref, m_out_ref, nrow_ref, cpart_ref):
+            del rowt_ref, colt_ref  # consumed by the BlockSpec index maps
+            _fused_tile(lr_beta_ref, w_ref, m_ref, g_ref, row_ref, col_ref,
+                        w_out_ref, m_out_ref, nrow_ref, cpart_ref,
+                        first=first_ref[pl.program_id(0)] == 1)
+    else:
+        def kernel(first_ref, rowt_ref, colt_ref, lr_beta_ref,
+                   w_ref, g_ref, row_ref, col_ref,
+                   w_out_ref, nrow_ref, cpart_ref):
+            del rowt_ref, colt_ref
+            _fused_tile(lr_beta_ref, w_ref, None, g_ref, row_ref, col_ref,
+                        w_out_ref, None, nrow_ref, cpart_ref,
+                        first=first_ref[pl.program_id(0)] == 1)
+    return kernel
+
+
+_ragged_kernel = _make_ragged_kernel(True)
+_ragged_nomom_kernel = _make_ragged_kernel(False)
 
 
 def _pad2(x, bm, bn):
@@ -453,3 +486,95 @@ def sm3_ii_fused_stacked_step(w: jnp.ndarray, m: Optional[jnp.ndarray],
     )(lr_beta, wp, mp, gp, rp, cp)
     new_col = jnp.max(cpart, axis=1, keepdims=True)
     return w2[:, :M, :N], m2[:, :M, :N], nrow[:, :M], new_col[:, :, :N]
+
+
+@functools.partial(jax.jit, static_argnames=('interpret',))
+def sm3_ii_fused_ragged_step(w: jnp.ndarray, m: Optional[jnp.ndarray],
+                             g: jnp.ndarray,
+                             row_mu: jnp.ndarray, col_mu: jnp.ndarray,
+                             first: jnp.ndarray, rowtile: jnp.ndarray,
+                             coltile: jnp.ndarray,
+                             lr, beta1, mix, wd, gscale, *,
+                             interpret: bool = True):
+    """Fused SM3-II step over a *ragged* arena of heterogeneous leaves.
+
+    One launch per dtype bucket, independent of how many distinct merged
+    (M, N) shapes the bucket mixes: w/m/g are (T, bm, bn) tile arenas
+    (core.arena layout — leaf-major, row-major, column-minor), row_mu is
+    the (Tr, bm, 1) row-statistic arena, col_mu the (Tc, 1, bn) column
+    arena. The int32 tables (length T) are scalar-prefetch operands:
+    BlockSpec index maps read ``rowtile[t]`` / ``coltile[t]`` to bind each
+    tile to its accumulator blocks, and ``first[t]`` marks the first
+    column-tile of a (leaf, row-block) segment so the kernel initializes
+    the row output there and max-accumulates afterwards — valid because
+    the tile order keeps each segment's column tiles consecutive, so the
+    revisited row block stays VMEM-resident exactly as in the dense
+    kernels. Per tile the body is byte-for-byte ``_fused_tile`` — f32
+    results are bit-exact against the stacked/per-leaf/unfused paths.
+
+    Returns (w', m', row_mu', cpart) — or (w', row_mu', cpart) with
+    ``m=None`` (β1 == 0, the momentum-free body). w/m/row_mu alias their
+    inputs (in-place on the donated arenas). ``cpart`` is the (T, 1, bn)
+    per-tile column-max partial; the caller reduces it to the (Tc, 1, bn)
+    column arena with a segment-max over ``coltile`` (cross-row-block
+    column maxima cannot be accumulated in one pass without
+    non-consecutive output revisits — same constraint as the dense
+    kernels, and the partial is bm× smaller than the data streams).
+    """
+    if pltpu is None:  # pragma: no cover - TPU-less pallas builds
+        raise RuntimeError('the ragged arena kernel needs pallas TPU grid '
+                           'specs (scalar prefetch); jax.experimental.'
+                           'pallas.tpu is unavailable')
+    T, bm, bn = g.shape
+    Tr = row_mu.shape[0]
+    Tc = col_mu.shape[0]
+    lr_beta = _scalars(lr, beta1, mix, wd, gscale)
+
+    tile = pl.BlockSpec((1, bm, bn), lambda t, f, r, c: (t, 0, 0))
+    row_spec = pl.BlockSpec((1, bm, 1), lambda t, f, r, c: (r[t], 0, 0))
+    col_spec = pl.BlockSpec((1, 1, bn), lambda t, f, r, c: (c[t], 0, 0))
+    cpart_spec = pl.BlockSpec((1, 1, bn), lambda t, f, r, c: (t, 0, 0))
+    scalar_spec = pl.BlockSpec((1, 5), lambda t, f, r, c: (0, 0))
+    if m is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(T,),
+            in_specs=[scalar_spec, tile, tile, row_spec, col_spec],
+            out_specs=[tile, row_spec, cpart_spec],
+        )
+        w2, nrow, cpart = pl.pallas_call(
+            _ragged_nomom_kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((T, bm, bn), w.dtype),
+                jax.ShapeDtypeStruct((Tr, bm, 1), jnp.float32),
+                jax.ShapeDtypeStruct((T, 1, bn), jnp.float32),
+            ],
+            # operand indices count the scalar-prefetch args:
+            # 0..2 tables, 3 lr_beta, 4 w, 5 g, 6 row, 7 col
+            input_output_aliases={4: 0, 6: 1},
+            compiler_params=_dim_semantics(1),
+            interpret=interpret,
+        )(first, rowtile, coltile, lr_beta, w, g, row_mu, col_mu)
+        return w2, nrow, cpart
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[scalar_spec, tile, tile, tile, row_spec, col_spec],
+        out_specs=[tile, tile, row_spec, cpart_spec],
+    )
+    w2, m2, nrow, cpart = pl.pallas_call(
+        _ragged_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, bm, bn), w.dtype),
+            jax.ShapeDtypeStruct((T, bm, bn), m.dtype),
+            jax.ShapeDtypeStruct((Tr, bm, 1), jnp.float32),
+            jax.ShapeDtypeStruct((T, 1, bn), jnp.float32),
+        ],
+        # 0..2 tables, 3 lr_beta, 4 w, 5 m, 6 g, 7 row, 8 col
+        input_output_aliases={4: 0, 5: 1, 7: 2},
+        compiler_params=_dim_semantics(1),
+        interpret=interpret,
+    )(first, rowtile, coltile, lr_beta, w, m, g, row_mu, col_mu)
+    return w2, m2, nrow, cpart

@@ -34,6 +34,8 @@ KIND_STREAMS = {
     'fused_nomom': 3,    # w, g in; w' out
     'stacked': 5,
     'stacked_nomom': 3,
+    'ragged': 5,         # same streams as stacked; 1-D ragged grid
+    'ragged_nomom': 3,
     'vec': 7,            # w, m, g, acc in; w', m', acc' out
     'vec_nomom': 5,
 }
@@ -111,6 +113,68 @@ def choose_tiles(m: int, n: int, *, dtype=jnp.float32, kind: str = 'fused',
 
     least = min(padded(c) for c in feasible)
     tight = [c for c in feasible if padded(c) == least]
+    return max(tight, key=lambda c: (c[0] * c[1], c[1]))
+
+
+def ragged_registry_key(extents, dtype, kind: str = 'ragged') -> str:
+    """Registry key for a ragged (arena) bucket. The bucket's identity is
+    its multiset of merged extents; we key on a compact digest of it
+    (leaf count, total elements, max row/col extent) — stable across runs
+    for a fixed model/cover config, which is all the registry needs."""
+    extents = tuple((int(m), int(n)) for m, n in extents)
+    total = sum(m * n for m, n in extents)
+    mx = max(m for m, _ in extents)
+    nx = max(n for _, n in extents)
+    return (f'{kind}:{len(extents)}l{total}e{mx}x{nx}:'
+            f'{jnp.dtype(dtype).name}')
+
+
+def choose_ragged_tiles(extents, dtype, *, momentum: bool = True,
+                        vmem_budget: Optional[int] = None,
+                        use_registry: bool = True) -> Tuple[int, int]:
+    """(bm, bn) for a ragged arena bucket of merged (M, N) extents.
+
+    One tile serves every leaf in the bucket, so the chooser minimizes the
+    *total padded footprint* Σ ⌈M/bm⌉bm·⌈N/bn⌉bn across the ragged extents
+    (each pad byte is streamed by w/m/g per step) under the same
+    double-buffered VMEM byte model as the dense kernels; ties break
+    toward the widest tile (fewer row-block revisits, smaller col-partial
+    array). Registry winners (key: :func:`ragged_registry_key`) override.
+    """
+    extents = tuple((int(m), int(n)) for m, n in extents)
+    kind = 'ragged' if momentum else 'ragged_nomom'
+    if use_registry:
+        hit = _load_registry(registry_path()).get(
+            ragged_registry_key(extents, dtype, kind))
+        if hit is not None:
+            return hit
+    budget = vmem_budget if vmem_budget is not None else int(
+        os.environ.get(_BUDGET_ENV, DEFAULT_VMEM_BUDGET))
+    itemsize = max(jnp.dtype(dtype).itemsize, 4)
+    streams = KIND_STREAMS[kind]
+    max_m = max(m for m, _ in extents)
+    max_n = max(n for _, n in extents)
+    cands = {(min(bm, _round_up(max_m, 8)), min(bn, _round_up(max_n, 128)))
+             for bm in _BM_CANDIDATES for bn in _BN_CANDIDATES}
+
+    def tile_bytes(c):
+        return 2 * streams * c[0] * c[1] * itemsize
+
+    feasible = [c for c in cands if tile_bytes(c) <= budget]
+    if not feasible:
+        feasible = [min(cands, key=tile_bytes)]
+
+    def padded(c):
+        return sum(_round_up(m, c[0]) * _round_up(n, c[1])
+                   for m, n in extents)
+
+    # Unlike the dense chooser, near-minimal padding is traded for larger
+    # tiles: the ragged launch walks ONE 1-D grid over every tile in the
+    # bucket, so tile count is the per-launch overhead knob (grid steps on
+    # TPU, interpret iterations on CPU). Up to 10% padded-byte slack buys
+    # the biggest tile.
+    least = min(padded(c) for c in feasible)
+    tight = [c for c in feasible if padded(c) <= least * 1.10]
     return max(tight, key=lambda c: (c[0] * c[1], c[1]))
 
 

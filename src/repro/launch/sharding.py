@@ -134,6 +134,14 @@ def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree,
     behavior, correct for unblocked covers).
     """
     def handle(state):
+        from repro.core import arena as arena_lib
+        if isinstance(state, arena_lib.ArenaSM3State):
+            # persistent packed state: shard every arena's flat/tile
+            # leading axis (FSDP-style — the arena mixes leaves with
+            # different logical layouts, so the packed axis is the only
+            # uniformly correct one); offset tables are static plan data
+            # (never sharded state) and the tiny acc arenas replicate
+            return arena_lib.state_specs(state)
         if isinstance(state, tuple) and not hasattr(state, '_fields'):
             return tuple(handle(s) for s in state)
         if state is None:
@@ -188,15 +196,23 @@ def opt_state_specs(opt_state_shape: PyTree, pspecs: PyTree,
 
 
 def train_state_specs(state_shape, pspecs) -> PyTree:
-    """Specs for trainer.TrainState."""
+    """Specs for trainer.TrainState. With arena-resident params
+    (core.arena.ArenaParams) the param specs are the arena layout's own
+    (flat/tile axis sharded), regardless of ``pspecs``."""
+    from repro.core import arena as arena_lib
     from repro.train.trainer import TrainState
     ef = None
     if state_shape.ef is not None:
         ef = EFState(residual=pspecs)
+    if isinstance(state_shape.params, arena_lib.ArenaParams):
+        pspecs = arena_lib.params_specs(state_shape.params)
+        params_shape = None  # arena opt-state specs don't need the shapes
+    else:
+        params_shape = state_shape.params
     return TrainState(step=P(),
                       params=pspecs,
                       opt_state=opt_state_specs(state_shape.opt_state, pspecs,
-                                                params_shape=state_shape.params),
+                                                params_shape=params_shape),
                       ef=ef)
 
 

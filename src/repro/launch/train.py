@@ -40,6 +40,18 @@ def _parse():
                     help='with --fused: per-leaf kernel dispatch (one '
                          'launch per rank>=2 param) instead of stacked '
                          'shape buckets — for comparison runs')
+    ap.add_argument('--layout', default='',
+                    choices=['', 'arena', 'stacked', 'per_leaf'],
+                    help='fused SM3 execution layout (implies --fused): '
+                         'arena = persistent packed state + one ragged '
+                         'kernel launch per dtype (zero per-step state '
+                         'repacking); stacked/per_leaf = the per-step '
+                         'bucketing modes')
+    ap.add_argument('--arena-params', action='store_true',
+                    help='with --layout arena: keep the parameters arena-'
+                         'resident too — gradients arrive pre-packed via '
+                         'the forward unpack AD transpose, removing the '
+                         'remaining per-step w/g pack copies')
     ap.add_argument('--cover', default='',
                     help="SM3 cover for every leaf (e.g. 'blocked:8', "
                          "'full'); default is the paper's co-dim-1 cover. "
@@ -79,6 +91,21 @@ def main():
         extra['fused'] = True
         if args.fused_per_leaf:
             extra['stacked'] = False
+    if args.layout:
+        if args.optimizer not in ('sm3', 'sm3-ii'):
+            raise SystemExit('--layout is only supported with '
+                             '--optimizer sm3')
+        if args.fused_per_leaf and args.layout != 'per_leaf':
+            raise SystemExit('--fused-per-leaf conflicts with '
+                             f'--layout {args.layout}; pass one of them')
+        extra['fused'] = True
+        extra['layout'] = args.layout
+    if args.arena_params and args.layout != 'arena':
+        raise SystemExit('--arena-params requires --layout arena')
+    if args.arena_params and args.compression:
+        raise SystemExit('--arena-params is incompatible with --compression '
+                         '(the EF residual and pod all-reduce are per-leaf; '
+                         'gradients arrive packed)')
     if args.cover:
         if args.optimizer not in ('sm3', 'sm3-i', 'sm3-ii'):
             raise SystemExit('--cover is only supported with SM3 optimizers')
@@ -100,6 +127,8 @@ def main():
                                use_compression=args.compression == 'int8')
     pspecs = shr.param_specs(jax.eval_shape(lambda: state.params),
                              expert_shard)
+    if args.arena_params:
+        state = trainer.to_arena_params(state, opt)
     sspecs = shr.train_state_specs(jax.eval_shape(lambda: state), pspecs)
     bspecs = shr.batch_specs(multi_pod=False,
                              has_modality=cfg.family == 'vlm')

@@ -48,6 +48,38 @@ def init_state(key, cfg: ModelConfig, optimizer: opt_base.GradientTransformation
     )
 
 
+def to_arena_params(state: TrainState, optimizer) -> TrainState:
+    """Opt the parameters into arena residency (sm3 layout='arena' only):
+    ``state.params`` becomes an ``arena.ArenaParams`` living in the same
+    packed per-dtype arenas as the optimizer state, so the fused step
+    performs zero per-step layout copies (gradients arrive pre-packed via
+    the forward unpack's AD transpose). Checkpoints still save/restore the
+    logical per-leaf view. Inverse: :func:`from_arena_params`."""
+    pack = getattr(optimizer, 'pack_params', None)
+    if pack is None:
+        raise ValueError('arena-resident params need an arena optimizer '
+                         "(sm3(layout='arena'))")
+    if state.ef is not None:
+        # the error-feedback residual (and the pod-compression shard_map)
+        # are per-leaf trees; packed gradients would structure-mismatch them
+        raise ValueError('arena-resident params are incompatible with '
+                         'gradient compression (per-leaf EF residual vs '
+                         'packed gradients)')
+    return state._replace(params=pack(state.params))
+
+
+def from_arena_params(state: TrainState, optimizer) -> TrainState:
+    from repro.core.arena import ArenaParams
+    if not isinstance(state.params, ArenaParams):
+        return state
+    unpack = getattr(optimizer, 'unpack_params', None)
+    if unpack is None:
+        raise ValueError('state.params are arena-packed but the optimizer '
+                         'has no unpack_params — rebuild it with '
+                         "sm3(layout='arena') to unpack them")
+    return state._replace(params=unpack(state.params))
+
+
 def make_train_step(cfg: ModelConfig,
                     optimizer: opt_base.GradientTransformation,
                     microbatches: int = 1,
@@ -64,6 +96,12 @@ def make_train_step(cfg: ModelConfig,
     jax.checkpoint_policies entry controlling the recompute/memory trade."""
 
     def loss_fn(params, mb):
+        from repro.core.arena import ArenaParams
+        if isinstance(params, ArenaParams):
+            # arena-resident params: the model consumes the per-leaf view;
+            # the AD transpose of this unpack packs the gradients straight
+            # into the arena layout — zero per-step layout copies
+            params = optimizer.unpack_params(params)
         loss, metrics = lm.lm_loss(params, mb, cfg, remat=remat,
                                    remat_policy=remat_policy,
                                    aux_loss_weight=aux_loss_weight
@@ -159,7 +197,8 @@ def train_loop(cfg: ModelConfig, optimizer, dataset, steps: int,
                checkpoint_every: int = 0, state: Optional[TrainState] = None,
                callback: Optional[Callable[[int, Dict], None]] = None,
                remat: bool = True,
-               donate: bool = True) -> Tuple[TrainState, list]:
+               donate: bool = True,
+               arena_params: bool = False) -> Tuple[TrainState, list]:
     """Single-host training loop (examples/benchmarks; the production entry
     point is repro.launch.train which adds the mesh + pjit).
 
@@ -168,7 +207,13 @@ def train_loop(cfg: ModelConfig, optimizer, dataset, steps: int,
     aliasing this removes the transient second copy of params + momentum +
     accumulators). The caller's ``state`` object stays valid: its buffers
     are copied once before the loop, and only the loop-internal copies are
-    consumed."""
+    consumed.
+
+    ``arena_params=True`` (sm3 layout='arena' only) packs the parameters
+    into the optimizer's arenas before the loop (see
+    :func:`to_arena_params`); the returned state keeps the packed form —
+    convert back with :func:`from_arena_params` if a per-leaf view is
+    needed."""
     step_fn = jax.jit(make_train_step(cfg, optimizer,
                                       microbatches=microbatches, remat=remat),
                       donate_argnums=(0,) if donate else ())
@@ -180,6 +225,8 @@ def train_loop(cfg: ModelConfig, optimizer, dataset, steps: int,
         # state object they passed in
         state = jax.tree.map(
             lambda x: jnp.array(x) if hasattr(x, 'dtype') else x, state)
+    if arena_params:
+        state = to_arena_params(state, optimizer)
     start = int(state.step)
     history = []
     t0 = time.perf_counter()

@@ -1,0 +1,515 @@
+"""The persistent-arena execution layout (sm3 layout='arena'):
+
+* f32 bit-exact parity of ragged-arena vs stacked vs unfused across the
+  cover grid (co-dim-1 / blocked / grouped / full) and beta1 in {0.9, 0},
+* launch-count guarantees (<= 2 launches per dtype, any shape mix),
+* zero per-step state repacking (packed_copy_bytes == 0; stacked > 0),
+* checkpoint round-trips arena <-> per-leaf (a PR 3-style checkpoint loads
+  into arena mode and back),
+* analytic arena memory == materialized state, pad slack included,
+* sharding specs (flat-axis sharding, quantum-divisible extents),
+* arena-resident params (pack/unpack round-trip, pre-packed gradients),
+* config/registry surface (layout validation, extra keys).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arena, base, memory
+from repro.core import covers as covers_lib
+from repro.core.base import OptimizerSpec
+from repro.core.registry import make_optimizer
+from repro.core.sm3 import SM3Config, sm3
+from repro.checkpoint.manager import CheckpointManager
+from repro.kernels.sm3 import ops
+
+ATOL_BF16 = 1e-2
+
+
+def _params(with_bf16=True):
+    k = jax.random.PRNGKey(0)
+    def rnd(i, shape, dtype=jnp.float32):
+        return jax.random.normal(jax.random.fold_in(k, i), shape, dtype)
+    p = {
+        'layer0': {'w': rnd(0, (48, 40)), 'b': rnd(1, (40,))},
+        'layer1': {'w': rnd(2, (48, 40)), 'b': rnd(3, (40,))},
+        'emb': rnd(4, (64, 24)),
+        'w3d': rnd(5, (3, 20, 36)),
+        'deg': rnd(6, (13, 1)),
+        'scale': jnp.asarray(0.5),
+    }
+    if with_bf16:
+        p['wbf'] = rnd(7, (33, 40), jnp.bfloat16)
+    return p
+
+
+def _grads_like(params, seed, t):
+    leaves, treedef = jax.tree.flatten(params)
+    return treedef.unflatten([
+        jax.random.normal(jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), t), i), p.shape, p.dtype)
+        for i, p in enumerate(leaves)])
+
+
+def _run(tx, params, steps, *, fused, donate=False, seed=11):
+    if fused:
+        fn = jax.jit(tx.fused_update,
+                     donate_argnums=(1, 2) if donate else ())
+    else:
+        def f(g, s, p):
+            upd, s2 = tx.update(g, s, p)
+            return base.apply_updates(p, upd), s2
+        fn = jax.jit(f)
+    s, p = tx.init(params), params
+    for t in range(steps):
+        p, s = fn(_grads_like(params, seed, t), s, p)
+    return p, s
+
+
+def _assert_params_equal(pa, pb, params):
+    fa, treedef = jax.tree.flatten(pa)
+    fb = treedef.flatten_up_to(pb)
+    for x, y, p in zip(fa, fb, treedef.flatten_up_to(params)):
+        if p.dtype == jnp.bfloat16:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       atol=ATOL_BF16, rtol=ATOL_BF16)
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+POLICIES = {
+    'codim1': None,
+    'blocked': covers_lib.CoverPolicy(default='blocked:2'),
+    'grouped': covers_lib.CoverPolicy(rules=(('w3d', 'grouped:0|1,2'),)),
+    'full': covers_lib.CoverPolicy(default='full'),
+}
+
+
+# ---------------------------------------------------------------------------
+# parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('beta1', [0.9, 0.0])
+@pytest.mark.parametrize('policy_name', sorted(POLICIES))
+def test_arena_vs_stacked_vs_unfused_parity(policy_name, beta1):
+    """f32 bit-exact 3-way parity over >= 5 steps across the cover grid."""
+    params = _params()
+    policy = POLICIES[policy_name]
+    kw = dict(beta1=beta1, cover_policy=policy)
+    pu, su = _run(sm3(0.1, **kw), params, 5, fused=False)
+    pf, sf = _run(sm3(0.1, fused=True, **kw), params, 5, fused=True)
+    pa, sa = _run(sm3(0.1, layout='arena', **kw), params, 5, fused=True)
+    _assert_params_equal(pu, pf, params)
+    _assert_params_equal(pu, pa, params)
+    # the arena state, viewed logically, equals the chain state bit-for-bit
+    logical = arena.to_logical(sa)
+    for a, b in zip(jax.tree.leaves(logical), jax.tree.leaves(sf)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=ATOL_BF16, rtol=ATOL_BF16)
+
+
+def test_arena_with_clip_and_weight_decay():
+    # clip scale is a cross-program global-norm reduce — 1 ulp tolerance,
+    # same caveat as the stacked-path test
+    params = _params(with_bf16=False)
+    kw = dict(beta1=0.9, clip_norm=0.5, weight_decay=0.01)
+    pf, _ = _run(sm3(0.1, fused=True, **kw), params, 5, fused=True)
+    pa, _ = _run(sm3(0.1, layout='arena', **kw), params, 5, fused=True)
+    for x, y in zip(jax.tree.leaves(pf), jax.tree.leaves(pa)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_arena_donation_safe():
+    """Donated (in-place) arena buffers produce the same trajectory."""
+    params = _params(with_bf16=False)
+    p1, s1 = _run(sm3(0.1, layout='arena'), params, 6, fused=True)
+    p2, s2 = _run(sm3(0.1, layout='arena'), params, 6, fused=True,
+                  donate=True)
+    _assert_params_equal(p1, p2, params)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vec_only_tree():
+    """A tree with no rank>=2 leaves rides the vec arena alone."""
+    params = {'a': jnp.linspace(0.1, 1.0, 7), 'b': jnp.asarray(2.0)}
+    pu, _ = _run(sm3(0.1), params, 4, fused=False)
+    pa, sa = _run(sm3(0.1, layout='arena'), params, 4, fused=True)
+    _assert_params_equal(pu, pa, params)
+    assert sa.plan.mat == () and len(sa.plan.vec) == 1
+
+
+# ---------------------------------------------------------------------------
+# launch counts + zero repacking
+# ---------------------------------------------------------------------------
+
+def _trace_counters(tx, params):
+    s = tx.init(params)
+    g = _grads_like(params, 3, 0)
+    ops.reset_launch_count()
+    ops.reset_copy_bytes()
+    jax.eval_shape(tx.fused_update, g, s, params)
+    return ops.launch_counts(), ops.copy_bytes_counts()
+
+
+def test_arena_launches_le_two_per_dtype():
+    params = _params()  # f32 + bf16 leaves, many distinct shapes
+    launches, copies = _trace_counters(sm3(0.1, layout='arena'), params)
+    # 2 dtypes with rank>=2 leaves -> 2 ragged; 1 f32 vec bucket
+    assert launches == {'ragged': 2, 'vec': 1}
+    n_dtypes = 2
+    assert sum(launches.values()) <= 2 * n_dtypes
+    # zero model-sized state bytes copied for layout — the tentpole claim;
+    # the Θ(M+N) accumulator derive/fold ('acc') is paid by every layout
+    assert copies.get('state', 0) == 0
+    assert copies['grads'] > 0 and copies['params'] > 0
+    assert copies['acc'] > 0
+
+    # stacked spends real state bytes on stack/unstack every step
+    launches_s, copies_s = _trace_counters(sm3(0.1, fused=True), params)
+    assert copies_s['state'] > 0
+    assert copies_s['acc'] > 0
+    assert sum(launches_s.values()) > sum(launches.values())
+
+
+def test_arena_launches_shape_diversity_invariant():
+    """Adding distinct shapes must not add launches (the ragged win)."""
+    few = {'a': jnp.ones((16, 128)), 'b': jnp.ones((16, 128))}
+    many = {f'p{i}': jnp.ones((8 + i, 100 + 4 * i)) for i in range(7)}
+    l_few, _ = _trace_counters(sm3(0.1, layout='arena'), few)
+    l_many, _ = _trace_counters(sm3(0.1, layout='arena'), many)
+    assert sum(l_few.values()) == sum(l_many.values()) == 1
+    l_stacked, _ = _trace_counters(sm3(0.1, fused=True), many)
+    assert sum(l_stacked.values()) == 7
+
+
+def test_arena_beta1_zero_momentum_free():
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, beta1=0.0, layout='arena')
+    s = tx.init(params)
+    assert s.mom == () and s.vmom == () and s.fb_mom == ()
+    launches, _ = _trace_counters(tx, params)
+    assert launches == {'ragged_nomom': 1, 'vec_nomom': 1}
+
+
+# ---------------------------------------------------------------------------
+# logical conversion + checkpoints
+# ---------------------------------------------------------------------------
+
+def test_to_from_logical_roundtrip():
+    params = _params()
+    tx = sm3(0.1, layout='arena')
+    _, sa = _run(tx, params, 3, fused=True)
+    back = arena.from_logical(sa.plan, arena.to_logical(sa))
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize('beta1', [0.9, 0.0])
+def test_checkpoint_roundtrip_arena_and_per_leaf(tmp_path, beta1):
+    """A stacked (PR 3 layout) checkpoint restores into arena mode and
+    trains on identically; an arena checkpoint restores back into the
+    per-leaf layout bit-exactly."""
+    params = _params(with_bf16=False)
+    tx_s = sm3(0.1, beta1=beta1, fused=True)
+    tx_a = sm3(0.1, beta1=beta1, layout='arena')
+    p_s, s_s = _run(tx_s, params, 3, fused=True)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, s_s)
+
+    # per-leaf -> arena: restore onto an arena template, continue, compare
+    restored = mgr.restore(3, tx_a.init(params))
+    assert isinstance(restored, arena.ArenaSM3State)
+    fn_a = jax.jit(tx_a.fused_update)
+    fn_s = jax.jit(tx_s.fused_update)
+    pa, sa = p_s, restored
+    ps, ss = p_s, s_s
+    for t in range(3, 6):
+        g = _grads_like(params, 11, t)
+        pa, sa = fn_a(g, sa, pa)
+        ps, ss = fn_s(g, ss, ps)
+    _assert_params_equal(ps, pa, params)
+
+    # arena -> per-leaf: the on-disk form is the logical chain state
+    mgr.save(6, sa)
+    back = mgr.restore(6, tx_s.init(params))
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(ss)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_arena_params_logical_on_disk(tmp_path):
+    """Arena-resident params are stored as the per-leaf tree."""
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, layout='arena')
+    packed = tx.pack_params(params)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {'params': packed})
+    back = mgr.restore(0, {'params': params})  # per-leaf template
+    _assert_params_equal(back['params'], params, params)
+    # and back onto a packed template
+    repacked = mgr.restore(0, {'params': packed})
+    assert isinstance(repacked['params'], arena.ArenaParams)
+    _assert_params_equal(arena.unpack_params(repacked['params']), params,
+                         params)
+
+
+# ---------------------------------------------------------------------------
+# arena-resident params
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_params_roundtrip():
+    params = _params()
+    tx = sm3(0.1, layout='arena')
+    packed = tx.pack_params(params)
+    _assert_params_equal(tx.unpack_params(packed), params, params)
+    assert tx.pack_params(packed) is packed
+
+
+def test_resident_params_parity_incl_packed_grads():
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, layout='arena')
+    p_ref, s_ref = _run(tx, params, 4, fused=True)
+    fn = jax.jit(tx.fused_update)
+    packed = tx.pack_params(params)
+    s = tx.init(params)
+    for t in range(4):
+        g = _grads_like(params, 11, t)
+        if t % 2:
+            g = tx.pack_params(g)  # pre-packed grads (the AD-transpose form)
+        packed, s = fn(g, s, packed)
+    _assert_params_equal(tx.unpack_params(packed), p_ref, params)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resident params + packed grads -> no model-sized layout copies at
+    # all (only the Θ(state) accumulator derive/fold remains)
+    ops.reset_launch_count(); ops.reset_copy_bytes()
+    jax.eval_shape(tx.fused_update, tx.pack_params(_grads_like(params, 1, 0)),
+                   s, packed)
+    for kind in ('state', 'params', 'grads'):
+        assert ops.copy_bytes(kind) == 0, ops.copy_bytes_counts()
+
+
+# ---------------------------------------------------------------------------
+# memory accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('beta1', [0.9, 0.0])
+@pytest.mark.parametrize('policy_name', sorted(POLICIES))
+def test_arena_memory_analytic_matches_materialized(policy_name, beta1):
+    params = _params()
+    policy = POLICIES[policy_name]
+    tx = sm3(0.1, beta1=beta1, cover_policy=policy, layout='arena')
+    state = tx.init(params)
+    analytic = memory.optimizer_state_bytes('sm3', params, beta1=beta1,
+                                            cover_policy=policy,
+                                            layout='arena')
+    assert analytic == base.tree_bytes(state)
+    # pad slack is the arena's only overhead vs the per-leaf layout
+    slack = memory.sm3_arena_pad_bytes(params, beta1=beta1,
+                                       cover_policy=policy)
+    assert slack >= 0
+    if beta1:
+        assert slack > 0  # tile/lane padding exists for these shapes
+
+
+def test_arena_memory_rejects_non_sm3():
+    with pytest.raises(ValueError):
+        memory.optimizer_state_bytes('adam', _params(), layout='arena')
+    with pytest.raises(ValueError, match='unknown layout'):
+        memory.optimizer_state_bytes('sm3', _params(), layout='Arena')
+    # the non-arena layouts share the per-leaf accounting
+    assert memory.optimizer_state_bytes('sm3', _params(),
+                                        layout='stacked') \
+        == memory.optimizer_state_bytes('sm3', _params())
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+def test_arena_state_specs_structure():
+    from jax.sharding import PartitionSpec as P
+    params = _params()
+    tx = sm3(0.1, layout='arena')
+    state = tx.init(params)
+    specs = arena.state_specs(state)
+    # congruent trees: zipping leaves must line up 1:1
+    sl, st_ = jax.tree.leaves(specs), jax.tree.leaves(state)
+    assert len(sl) == len(st_)
+    for spec, leaf in zip(sl, st_):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim
+    # momentum tile arenas shard the flat axis; extents divide the quantum
+    for mom_arena, spec in zip(state.mom, specs.mom):
+        assert tuple(spec) == ('data', None, None)
+        assert mom_arena.shape[0] % arena.SHARD_QUANTUM == 0
+    for vacc, spec in zip(state.vacc, specs.vacc):
+        assert tuple(spec) == ('data', None)
+        assert vacc.shape[0] % arena.SHARD_QUANTUM == 0
+
+
+@pytest.mark.slow
+def test_arena_sharded_device_put_and_step():
+    """4 fake devices: arena state + params device_put under the mesh and
+    one sharded fused step matches the unsharded one (subprocess — the
+    device count must be set before jax initializes)."""
+    code = '''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import arena
+from repro.core.sm3 import sm3
+from repro.launch import sharding as shr
+from repro.launch.mesh import make_host_mesh
+
+k = jax.random.PRNGKey(0)
+params = {"w1": jax.random.normal(k, (48, 40)),
+          "w2": jax.random.normal(jax.random.fold_in(k, 1), (24, 130)),
+          "b": jax.random.normal(jax.random.fold_in(k, 2), (40,))}
+g = jax.tree.map(lambda p: p * 0.01, params)
+tx = sm3(0.1, layout="arena")
+state = tx.init(params)
+p_ref, s_ref = jax.jit(tx.fused_update)(g, state, params)
+
+mesh = make_host_mesh(data=2, model=2)
+specs = arena.state_specs(state)
+with mesh:
+    placed = jax.device_put(state, shr.as_shardings(specs, mesh))
+    p_sh, s_sh = jax.jit(tx.fused_update)(g, placed, params)
+for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_sh)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# checkpoint restore onto the *sharded* arena template keeps placements
+import tempfile
+from repro.checkpoint.manager import CheckpointManager
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d)
+    mgr.save(1, s_sh)
+    restored = mgr.restore(1, placed)
+    for t, r in zip(jax.tree.leaves(placed), jax.tree.leaves(restored)):
+        assert r.sharding.is_equivalent_to(t.sharding, t.ndim), (
+            t.sharding, r.sharding)
+    for a, b in zip(jax.tree.leaves(s_sh), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK")
+'''
+    env = dict(os.environ)
+    env['PYTHONPATH'] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), '..', 'src'),
+         env.get('PYTHONPATH', '')])
+    out = subprocess.run([sys.executable, '-c', code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert 'OK' in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# config / registry surface
+# ---------------------------------------------------------------------------
+
+def test_layout_config_surface():
+    assert SM3Config(layout='arena').resolved_layout() == 'arena'
+    assert SM3Config().resolved_layout() == 'stacked'
+    assert SM3Config(stacked=False).resolved_layout() == 'per_leaf'
+    with pytest.raises(ValueError):
+        SM3Config(layout='stackd').resolved_layout()
+    with pytest.raises(ValueError):
+        sm3(0.1, layout='nope')
+    # layout implies fused: the result has a fused_update
+    assert getattr(sm3(0.1, layout='per_leaf'), 'fused_update', None) \
+        is not None
+    assert isinstance(sm3(0.1, layout='arena'),
+                      base.ArenaGradientTransformation)
+
+
+def test_registry_layout_key():
+    opt = make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.1,
+                                       extra={'layout': 'arena'}))
+    assert isinstance(opt, base.ArenaGradientTransformation)
+    with pytest.raises(ValueError):
+        make_optimizer(OptimizerSpec(name='sm3', learning_rate=0.1,
+                                     extra={'layot': 'arena'}))
+    with pytest.raises(ValueError):
+        make_optimizer(OptimizerSpec(name='adam', learning_rate=0.1,
+                                     extra={'layout': 'arena'}))
+
+
+def test_arena_mixed_grad_dtype_raises():
+    params = {'a': jnp.ones((16, 130)), 'b': jnp.ones((8, 20))}
+    tx = sm3(0.1, layout='arena')
+    s = tx.init(params)
+    g = {'a': jnp.ones((16, 130)), 'b': jnp.ones((8, 20), jnp.bfloat16)}
+    with pytest.raises(ValueError, match='uniform gradient dtype'):
+        jax.eval_shape(tx.fused_update, g, s, params)
+
+
+def test_update_protocol_with_packed_inputs():
+    """update() unpacks resident params (needed e.g. for weight decay) and
+    rejects packed gradients with a clear error."""
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, weight_decay=0.01, layout='arena')
+    s = tx.init(params)
+    g = _grads_like(params, 5, 0)
+    upd_ref, _ = tx.update(g, s, params)
+    upd_packed, _ = tx.update(g, s, tx.pack_params(params))
+    for a, b in zip(jax.tree.leaves(upd_ref), jax.tree.leaves(upd_packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match='per-leaf gradients'):
+        tx.update(tx.pack_params(g), s, params)
+
+
+def test_arena_params_rejects_ef_compression():
+    """Per-leaf EF residuals cannot pair with packed gradients."""
+    from repro.core import compression
+    from repro.train import trainer as trainer_mod
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, layout='arena')
+    state = trainer_mod.TrainState(
+        step=jnp.zeros([], jnp.int32), params=params,
+        opt_state=tx.init(params), ef=compression.ef_init(params))
+    with pytest.raises(ValueError, match='compression'):
+        trainer_mod.to_arena_params(state, tx)
+
+
+def test_shard_quantum_env_override(monkeypatch):
+    """REPRO_ARENA_SHARD_QUANTUM widens the flat-axis divisibility for
+    data meshes larger than the default quantum of 8."""
+    monkeypatch.setenv('REPRO_ARENA_SHARD_QUANTUM', '32')
+    params = _params(with_bf16=False)
+    tx = sm3(0.1, layout='arena')
+    state = tx.init(params)
+    for mom_arena in state.mom:
+        assert mom_arena.shape[0] % 32 == 0
+    for vacc in state.vacc:
+        assert vacc.shape[0] % 32 == 0
+    # parity is quantum-invariant (pad tiles are inert)
+    p32, _ = _run(tx, params, 3, fused=True)
+    monkeypatch.delenv('REPRO_ARENA_SHARD_QUANTUM')
+    p8, _ = _run(sm3(0.1, layout='arena'), params, 3, fused=True)
+    _assert_params_equal(p8, p32, params)
+
+
+def test_update_reference_protocol_on_arena_state():
+    """The two-phase update() path stays exact through the logical view."""
+    params = _params(with_bf16=False)
+    tx_a = sm3(0.1, layout='arena')
+    tx_u = sm3(0.1)
+    s_a, s_u = tx_a.init(params), tx_u.init(params)
+    p_a, p_u = params, params
+    for t in range(3):
+        g = _grads_like(params, 5, t)
+        upd_a, s_a = jax.jit(tx_a.update)(g, s_a, p_a)
+        upd_u, s_u = jax.jit(tx_u.update)(g, s_u, p_u)
+        p_a = base.apply_updates(p_a, upd_a)
+        p_u = base.apply_updates(p_u, upd_u)
+    _assert_params_equal(p_u, p_a, params)
